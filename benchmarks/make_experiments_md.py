@@ -1,0 +1,66 @@
+"""Assemble EXPERIMENTS.md from the dry-run artifacts + the hand-written
+§Perf iteration log (kept in benchmarks/perf_log.md).
+
+PYTHONPATH=src:. python -m benchmarks.make_experiments_md
+"""
+
+import json
+import os
+
+from benchmarks import roofline
+
+
+def dryrun_summary(art_dir: str, mesh: str) -> str:
+    rows = []
+    ok = skip = 0
+    for f in sorted(os.listdir(art_dir)):
+        if not f.endswith(".json"):
+            continue
+        rec = json.load(open(os.path.join(art_dir, f)))
+        if rec.get("mesh") not in (mesh, None) and "skipped" not in rec:
+            continue
+        if "skipped" in rec:
+            skip += 1
+            continue
+        if "error" in rec:
+            rows.append(f"| {rec['arch']} | {rec.get('shape')} | ERROR |")
+            continue
+        ok += 1
+        mem = rec["memory"]
+        rows.append(
+            f"| {rec['arch']} | {rec['shape']} | {rec['kind']} | "
+            f"{rec['flops_per_device']:.2e} | "
+            f"{rec['collective_bytes_per_device']:.2e} | "
+            f"{(mem['argument_bytes'])/1e9:.1f} | "
+            f"{(mem['temp_bytes'])/1e9:.1f} | {rec['compile_s']:.0f} |"
+        )
+    hdr = ("| arch | shape | kind | FLOPs/dev | coll B/dev | args GB | "
+           "temp GB | compile s |\n|" + "---|" * 8)
+    return (f"{ok} cells compiled, {skip} documented skips.\n\n" + hdr + "\n"
+            + "\n".join(rows))
+
+
+def main():
+    base = roofline.to_markdown(roofline.build_table("artifacts/dryrun_baseline", "16x16"))
+    opt_dir = "artifacts/dryrun_opt" if os.path.isdir("artifacts/dryrun_opt") \
+        else "artifacts/dryrun"
+    opt = roofline.to_markdown(roofline.build_table(opt_dir, "16x16"))
+    single = dryrun_summary(opt_dir, "16x16")
+    multi = dryrun_summary("artifacts/dryrun", "2x16x16") if any(
+        "2x16x16" in f or True for f in os.listdir("artifacts/dryrun")) else ""
+    multi = dryrun_summary("artifacts/dryrun", "2x16x16")
+    perf = open("benchmarks/perf_log.md").read()
+    header = open("benchmarks/experiments_header.md").read()
+    out = header
+    out = out.replace("{{DRYRUN_SINGLE}}", single)
+    out = out.replace("{{DRYRUN_MULTI}}", multi)
+    out = out.replace("{{ROOFLINE_BASELINE}}", base)
+    out = out.replace("{{ROOFLINE_OPT}}", opt)
+    out = out.replace("{{PERF_LOG}}", perf)
+    with open("EXPERIMENTS.md", "w") as f:
+        f.write(out)
+    print("wrote EXPERIMENTS.md", len(out), "bytes")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,152 @@
+"""Roofline analysis from the dry-run artifacts (deliverable g).
+
+Per (arch x shape x mesh) cell, derive the three roofline terms on TPU v5e:
+
+  compute    = FLOPs_per_device            / 197e12  bf16 FLOP/s
+  memory     = HBM_bytes_per_device        / 819e9   B/s
+  collective = collective_bytes_per_device / 50e9    B/s (per ICI link)
+
+FLOPs come from the scan-aware HLO analyzer (dot ops x loop trip counts; see
+launch/hlo_analysis.py).  HBM bytes use the analyzer's bytes_written (every
+materialized buffer, x trips) as the traffic model, floored by the parameter
+bytes that must stream from HBM each step.  Collective bytes are summed
+result-buffer bytes of all collective ops, x trips.
+
+Also reported per cell:
+  * MODEL_FLOPS = 6 * N_active * tokens (train) or 2 * N_active * tokens
+    (serve), the useful-work floor;
+  * the ratio MODEL_FLOPS_per_device / HLO_FLOPs (remat/dispatch waste);
+  * dominant term and a one-line mitigation note.
+
+Usage:  PYTHONPATH=src python -m benchmarks.roofline [--dir artifacts/dryrun]
+writes a markdown table to stdout (EXPERIMENTS.md §Roofline embeds it).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # B/s
+LINK_BW = 50e9  # B/s per ICI link
+
+from repro.configs import SHAPES_BY_NAME, EinetConfig, get_config
+
+
+def model_flops_per_device(rec: Dict) -> Optional[float]:
+    """Useful-work floor, per device."""
+    arch, shape = rec["arch"], rec.get("shape")
+    cfg = get_config(arch)
+    n_dev = rec["num_devices"]
+    if isinstance(cfg, EinetConfig):
+        return None
+    n_act = cfg.active_param_count()
+    s = SHAPES_BY_NAME[shape]
+    if rec["kind"] == "train":
+        tokens = s.global_batch * s.seq_len
+        return 6.0 * n_act * tokens / n_dev
+    if rec["kind"] == "prefill":
+        tokens = s.global_batch * s.seq_len
+        return 2.0 * n_act * tokens / n_dev
+    tokens = s.global_batch  # decode: one token per sequence
+    return 2.0 * n_act * tokens / n_dev
+
+
+def analyze_record(rec: Dict) -> Dict:
+    n_dev = rec["num_devices"]
+    mf = model_flops_per_device(rec)
+    hlo_flops = rec["flops_per_device"]
+    flops = max(hlo_flops, mf or 0.0)  # matvec-fused decode cells: use model
+    param_bytes = (rec.get("param_count") or 0) * 2 / n_dev  # bf16 stream floor
+    mem_bytes = max(rec["bytes_written_per_device"], param_bytes)
+    terms = {
+        "compute_s": flops / PEAK_FLOPS,
+        "memory_s": mem_bytes / HBM_BW,
+        "collective_s": rec["collective_bytes_per_device"] / LINK_BW,
+    }
+    dominant = max(terms, key=terms.get)
+    total = max(terms.values())
+    out = dict(rec)
+    out.update(terms)
+    out["dominant"] = dominant.replace("_s", "")
+    out["model_flops_per_device"] = mf
+    out["useful_ratio"] = (mf / hlo_flops) if (mf and hlo_flops) else None
+    # roofline fraction: useful compute time / bottleneck time
+    useful_s = (mf or flops) / PEAK_FLOPS
+    out["roofline_fraction"] = useful_s / total if total > 0 else None
+    return out
+
+
+_NOTES = {
+    "compute": "compute-bound: raise MXU utilization (bf16 everywhere, "
+               "larger per-device tiles) or shrink remat recompute",
+    "memory": "memory-bound: fuse or shrink materialized scan-body buffers; "
+              "cast f32 temporaries to bf16; larger tiles per HBM pass",
+    "collective": "collective-bound: reshard to cut all-gathers (FSDP "
+                  "prefetch, SP<->TP transitions), overlap via async "
+                  "collectives / collective matmul",
+}
+
+
+def build_table(art_dir: str, mesh: Optional[str] = "16x16"):
+    rows = []
+    for f in sorted(os.listdir(art_dir)):
+        if not f.endswith(".json"):
+            continue
+        with open(os.path.join(art_dir, f)) as fh:
+            rec = json.load(fh)
+        if mesh and rec.get("mesh") != mesh and "skipped" not in rec:
+            continue
+        if "error" in rec:
+            rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                         "skipped": "ERROR: " + rec["error"][:60]})
+            continue
+        if "skipped" in rec:
+            if mesh and rec.get("mesh") not in (None, mesh):
+                continue
+            rows.append(rec)
+            continue
+        rows.append(analyze_record(rec))
+    return rows
+
+
+def to_markdown(rows) -> str:
+    hdr = ("| arch | shape | compute s | memory s | collective s | dominant | "
+           "MODEL/HLO flops | roofline frac | note |")
+    sep = "|" + "---|" * 9
+    lines = [hdr, sep]
+    for r in rows:
+        if "skipped" in r:
+            lines.append(
+                f"| {r['arch']} | {r.get('shape','-')} | - | - | - | skipped | "
+                f"- | - | {r['skipped']} |"
+            )
+            continue
+        ur = f"{r['useful_ratio']:.2f}" if r["useful_ratio"] else "-"
+        rf = f"{r['roofline_fraction']:.3f}" if r["roofline_fraction"] else "-"
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3f} | "
+            f"{r['memory_s']:.3f} | {r['collective_s']:.3f} | {r['dominant']} | "
+            f"{ur} | {rf} | {_NOTES[r['dominant']][:58]} |"
+        )
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="artifacts/dryrun")
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--json", action="store_true")
+    args = ap.parse_args()
+    rows = build_table(args.dir, args.mesh)
+    if args.json:
+        print(json.dumps(rows, indent=1, default=str))
+    else:
+        print(to_markdown(rows))
+
+
+if __name__ == "__main__":
+    main()

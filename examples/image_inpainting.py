@@ -1,0 +1,69 @@
+"""Fig. 4 workflow: PD-structure EiNet as a generative image model with
+tractable inpainting (conditional sampling given arbitrary evidence masks).
+
+PYTHONPATH=src python examples/image_inpainting.py
+
+Writes artifacts/example_inpainting/{originals,masked,inpainted,samples}.npy
+and prints reconstruction metrics for three different mask patterns --
+the "multi-purpose predictor" property (paper Eq. 1): ONE model answers all
+conditionals exactly, no retraining per mask.
+"""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import EiNet, Normal, poon_domingos
+from repro.core.em import EMConfig, stochastic_em_update
+from repro.data.synthetic import gaussian_mixture_images
+
+H = W = 16
+C = 3
+OUT = "artifacts/example_inpainting"
+
+
+def main():
+    data = gaussian_mixture_images(4096 + 32, H, W, C, seed=0)
+    train, test = data[:4096], data[4096:]
+    graph = poon_domingos(H, W, delta=4, num_channels=C, axes=("w",))
+    net = EiNet(graph, num_sums=12,
+                exponential_family=Normal(min_var=1e-6, max_var=1e-2))
+    params = net.init(jax.random.PRNGKey(0))
+    step = jax.jit(lambda p, b: stochastic_em_update(
+        net, p, b, EMConfig(step_size=0.5)))
+    for epoch in range(6):
+        for i in range(0, 4096, 256):
+            params, ll = step(params, jnp.asarray(train[i: i + 256]))
+        print(f"epoch {epoch}: LL {float(ll):9.2f}")
+
+    xt = jnp.asarray(test)
+    masks = {
+        "left_half": np.tile(
+            (np.arange(W) < W // 2)[None, :, None], (H, 1, C)),
+        "top_half": np.tile(
+            (np.arange(H) < H // 2)[:, None, None], (1, W, C)),
+        "sparse_25pct": np.random.RandomState(0).rand(H, W, C) < 0.25,
+    }
+    os.makedirs(OUT, exist_ok=True)
+    np.save(f"{OUT}/originals.npy", np.asarray(xt).reshape(-1, H, W, C))
+    mean_img = train.mean(0)
+    for name, m in masks.items():
+        ev = jnp.asarray(np.tile(m.reshape(1, -1), (len(test), 1)))
+        recon = np.asarray(net.conditional_sample(
+            params, jax.random.PRNGKey(1), xt, ev, mode="argmax"))
+        missing = ~np.asarray(ev)
+        mse = np.mean((recon - np.asarray(xt))[missing] ** 2)
+        base = np.mean((np.tile(mean_img, (len(test), 1)) -
+                        np.asarray(xt))[missing] ** 2)
+        print(f"{name:14s}: inpaint MSE {mse:.4f} vs mean-fill {base:.4f} "
+              f"({'better' if mse < base else 'WORSE'})")
+        np.save(f"{OUT}/inpainted_{name}.npy", recon.reshape(-1, H, W, C))
+    samples = np.asarray(net.sample(params, jax.random.PRNGKey(2), 16))
+    np.save(f"{OUT}/samples.npy", samples.reshape(-1, H, W, C))
+    print(f"wrote arrays to {OUT}/")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,96 @@
+"""End-to-end training driver: a multi-million-parameter EiNet density model
+trained for a few hundred stochastic-EM steps with the full production stack
+-- sharded data pipeline, fault-tolerant loop, atomic async checkpoints,
+restart-and-continue.
+
+PYTHONPATH=src python examples/train_density.py [--steps 200] [--kill-at 120]
+
+``--kill-at`` injects a simulated node failure mid-run to demonstrate the
+checkpoint/restart path (the loop restores and the final LL matches an
+uninterrupted run).
+"""
+
+import argparse
+import os
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.core import EiNet, Normal, random_binary_trees
+from repro.core.em import EMConfig, stochastic_em_update
+from repro.data.pipeline import ShardedLoader
+from repro.data.synthetic import gaussian_mixture_images
+from repro.dist import fault_tolerance as ft
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=256)
+    ap.add_argument("--num-sums", type=int, default=16)
+    ap.add_argument("--kill-at", type=int, default=None)
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+
+    h = w = 16
+    d = h * w * 3
+    graph = random_binary_trees(d, depth=5, num_repetitions=8, seed=0)
+    net = EiNet(graph, num_sums=args.num_sums,
+                exponential_family=Normal(min_var=1e-6, max_var=1e-2))
+    params = net.init(jax.random.PRNGKey(0))
+    print(f"model: {net.num_params(params):,} parameters, "
+          f"{len(net.pair_specs)} einsum layers")
+
+    data = gaussian_mixture_images(8192, h, w, 3, seed=1)
+
+    def make_batch(step, shard, n):
+        idx = (np.arange(n) + step * n + shard * 10_007) % len(data)
+        return {"x": data[idx]}
+
+    loader = ShardedLoader(make_batch, global_batch=args.batch)
+
+    emcfg = EMConfig(step_size=0.3)
+    step_fn_jit = jax.jit(lambda p, b: stochastic_em_update(net, p, b, emcfg))
+    lls = []
+
+    def step_fn(state, batch):
+        p, ll = step_fn_jit(state["params"], jnp.asarray(batch["x"]))
+        lls.append(float(ll))
+        return {"params": p, "step": state["step"] + 1}
+
+    ckpt_dir = args.ckpt_dir or tempfile.mkdtemp(prefix="einet_ckpt_")
+    mgr = CheckpointManager(ckpt_dir, keep=2)
+    killed = set()
+
+    def injector(step):
+        if args.kill_at is not None and step == args.kill_at \
+                and step not in killed:
+            killed.add(step)
+            raise RuntimeError("simulated preemption")
+
+    t0 = time.time()
+    state, stats = ft.run_training(
+        step_fn,
+        {"params": params, "step": jnp.zeros((), jnp.int32)},
+        loader.batch_at,
+        mgr,
+        num_steps=args.steps,
+        cfg=ft.LoopConfig(checkpoint_every=50),
+        fail_injector=injector,
+    )
+    dt = time.time() - t0
+    print(f"trained {args.steps} steps in {dt:.1f}s "
+          f"({dt/args.steps*1e3:.0f} ms/step), restarts={stats['restarts']}")
+    print(f"LL: first10 {np.mean(lls[:10]):8.2f} -> last10 {np.mean(lls[-10:]):8.2f}")
+    test = jnp.asarray(data[:512])
+    print(f"final mean test LL: "
+          f"{float(jnp.mean(net.log_likelihood(state['params'], test))):.2f}")
+    print(f"checkpoints in {ckpt_dir}: steps {mgr.all_steps()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,16 @@
+"""repro: Einsum Networks (Peharz et al., ICML 2020) as a production
+multi-pod JAX framework.
+
+Subpackages:
+  core        the paper's contribution (einsum-layer PCs, autodiff-EM)
+  kernels     Pallas TPU kernels + jnp oracles
+  models      LM substrate (the 10 assigned architectures)
+  configs     architecture registry (--arch <id>)
+  data        synthetic datasets + sharded pipeline
+  optim       AdamW (quantizable state), gradient compression
+  checkpoint  atomic async checkpoints
+  dist        sharding rules, fault tolerance, elasticity
+  launch      production mesh, dry-run, train/serve drivers
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,5 @@
+"""Atomic, sharded, asynchronous checkpointing."""
+
+from repro.checkpoint.checkpoint import CheckpointManager
+
+__all__ = ["CheckpointManager"]

@@ -1,0 +1,29 @@
+"""jamba-v0.1-52b [hybrid]: Mamba+attention 1:7 interleave, MoE every 2 layers.
+
+32L d_model=4096 32H (GQA kv=8) d_ff=14336 vocab=65536, MoE 16e top-2
+[arXiv:2403.19887; hf].  Period of 8 blocks: attention at position 4 (1:7
+attn:mamba), MoE on odd positions (every second layer).
+"""
+from repro.configs.base import ModelConfig
+
+_PATTERN = ("mamba", "mamba", "mamba", "mamba", "attn", "mamba", "mamba", "mamba")
+_MOE = (False, True, False, True, False, True, False, True)
+
+CONFIG = ModelConfig(
+    name="jamba-v0.1-52b",
+    family="hybrid",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    d_ff=14336,
+    vocab_size=65536,
+    block_pattern=_PATTERN,
+    moe_pattern=_MOE,
+    num_experts=16,
+    num_experts_per_tok=2,
+    d_ff_expert=14336,
+    ssm_state_dim=16,
+    ssm_conv_dim=4,
+    ssm_expand=2,
+)

@@ -1,0 +1,24 @@
+"""kimi-k2-1t-a32b [moe]: trillion-parameter MoE (paper-table numbers).
+
+61L d_model=7168 64H (GQA kv=8) d_ff=2048 (expert) vocab=163840,
+MoE 384e top-8  [arXiv:2501.kimi2; unverified].  All layers MoE per the
+assignment table; d_ff is the per-expert hidden dim.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="kimi-k2-1t-a32b",
+    family="moe",
+    num_layers=61,
+    d_model=7168,
+    num_heads=64,
+    num_kv_heads=8,
+    d_ff=0,
+    vocab_size=163840,
+    block_pattern=("attn",),
+    moe_pattern=(True,),
+    num_experts=384,
+    num_experts_per_tok=8,
+    d_ff_expert=2048,
+    head_dim_override=112,
+)

@@ -1,0 +1,22 @@
+"""moonshot-v1-16b-a3b [moe]: kimi/moonlight, 64 experts top-6.
+
+48L d_model=2048 16H (GQA kv=16) d_ff=1408 (expert) vocab=163840, MoE 64e
+top-6  [hf:moonshotai/Moonlight-16B-A3B; hf].
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="moonshot-v1-16b-a3b",
+    family="moe",
+    num_layers=48,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=0,
+    vocab_size=163840,
+    block_pattern=("attn",),
+    moe_pattern=(True,),
+    num_experts=64,
+    num_experts_per_tok=6,
+    d_ff_expert=1408,
+)

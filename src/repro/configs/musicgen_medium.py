@@ -1,0 +1,19 @@
+"""musicgen-medium [audio]: decoder-only over EnCodec tokens.
+
+48L d_model=1536 24H (GQA kv=24) d_ff=6144 vocab=2048  [arXiv:2306.05284; hf]
+EnCodec frontend is a STUB: input_specs() feeds precomputed frame embeddings.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="musicgen-medium",
+    family="audio",
+    num_layers=48,
+    d_model=1536,
+    num_heads=24,
+    num_kv_heads=24,
+    d_ff=6144,
+    vocab_size=2048,
+    activation="gelu",
+    embedding_input=True,
+)

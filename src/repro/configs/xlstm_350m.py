@@ -1,0 +1,22 @@
+"""xlstm-350m [ssm]: sLSTM + mLSTM blocks.
+
+24L d_model=1024 4H (GQA kv=4) d_ff=0 vocab=50304  [arXiv:2405.04517;
+unverified].  d_ff=0: the cells carry their own up/down projections
+(mLSTM proj factor 2).  Pattern: 3 mLSTM blocks then 1 sLSTM block (the
+paper's sparse-sLSTM placements).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="xlstm-350m",
+    family="ssm",
+    num_layers=24,
+    d_model=1024,
+    num_heads=4,
+    num_kv_heads=4,
+    d_ff=0,
+    vocab_size=50304,
+    block_pattern=("mlstm", "mlstm", "mlstm", "slstm"),
+    moe_pattern=(False, False, False, False),
+    lstm_proj_factor=2.0,
+)

@@ -1,0 +1,49 @@
+"""Paper core: Einsum Networks (Peharz et al., ICML 2020) in JAX."""
+
+from repro.core.baseline import NaiveEiNet
+from repro.core.einet import EiNet
+from repro.core.em import (
+    EMConfig,
+    accumulate_statistics,
+    em_statistics,
+    em_update,
+    m_step,
+    stochastic_em_update,
+    zeros_like_statistics,
+)
+from repro.core.exponential_family import (
+    Bernoulli,
+    Binomial,
+    Categorical,
+    Normal,
+    make_exponential_family,
+)
+from repro.core.region_graph import (
+    RegionGraph,
+    assign_replicas,
+    poon_domingos,
+    random_binary_trees,
+    topological_layers,
+)
+
+__all__ = [
+    "EiNet",
+    "NaiveEiNet",
+    "EMConfig",
+    "em_statistics",
+    "em_update",
+    "m_step",
+    "stochastic_em_update",
+    "accumulate_statistics",
+    "zeros_like_statistics",
+    "Normal",
+    "Bernoulli",
+    "Binomial",
+    "Categorical",
+    "make_exponential_family",
+    "RegionGraph",
+    "random_binary_trees",
+    "poon_domingos",
+    "topological_layers",
+    "assign_replicas",
+]

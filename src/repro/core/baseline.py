@@ -1,0 +1,43 @@
+"""The naive PC implementation the paper benchmarks against (§3.2, §4.1).
+
+LibSPN (Pronobis et al., 2017) and SPFlow (Molina et al., 2019) compute the
+core sum-product unit entirely in the log-domain:
+
+  1. materialize the outer *sum* of log-densities
+     ``P[b,l,i,j] = logN[b,l,i] + logN'[b,l,j]``            (K^2 products, stored)
+  2. broadcast-add ``log W[l,k,i,j]``                        (K^3 terms, stored)
+  3. ``log-sum-exp`` over (i, j)                             (K^3 exp ops)
+
+versus EiNets' 2K exp / K log / K^3 *multiply* ops with nothing materialized.
+Both paths compute the identical function, so Table-1-style log-likelihood
+parity is exact up to float error -- which is what ``benchmarks/bench_table1``
+checks -- while Fig. 3/6 measure the time/memory gap.
+
+``NaiveEiNet`` shares all structure/parameters with ``EiNet``; only the layer
+computation differs, making the comparison apples-to-apples.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.einet import EiNet
+
+
+def log_einsum_exp_naive(w: jax.Array, ln_left: jax.Array,
+                         ln_right: jax.Array) -> jax.Array:
+    """Steps 1-3 above: explicit products + K^3-exp log-sum-exp."""
+    prod = ln_left[:, :, :, None] + ln_right[:, :, None, :]  # (B, L, K, K) stored
+    logw = jnp.log(jnp.maximum(w, 1e-38))  # (L, K_out, K, K)
+    t = logw[None] + prod[:, :, None, :, :]  # (B, L, K_out, K, K) stored
+    b, l, k_out = t.shape[:3]
+    return jax.scipy.special.logsumexp(t.reshape(b, l, k_out, -1), axis=-1)
+
+
+class NaiveEiNet(EiNet):
+    """EiNet structure evaluated with the naive LibSPN/SPFlow-style layers."""
+
+    def __init__(self, *args, **kwargs):
+        kwargs["impl"] = "naive"
+        super().__init__(*args, **kwargs)

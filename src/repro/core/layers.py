@@ -1,0 +1,86 @@
+"""The einsum layer and mixing layer (paper §3.2, §3.3, Appendix B).
+
+Everything probabilistic lives in the log-domain; the weight tensors live in
+the *linear* domain.  Numerical stability comes from the paper's
+log-einsum-exp trick (Eq. 4): subtract per-row maxes before ``exp`` so the
+einsum contracts numbers in (0, 1], then add the maxes back after the ``log``.
+
+``log_einsum_exp`` dispatches between a pure-XLA einsum path (used on CPU and
+as the autodiff path for EM) and the fused Pallas TPU kernel in
+``repro.kernels`` (used for the forward hot loop on TPU).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# Large-negative stand-in for log(0): keeps gradients finite where jnp.inf
+# would produce NaNs through max/exp.
+NEG_INF = -1e30
+
+
+def log_einsum_exp(w: jax.Array, ln_left: jax.Array, ln_right: jax.Array,
+                   impl: str = "xla") -> jax.Array:
+    """Eq. (5) with the log-einsum-exp trick of Eq. (4).
+
+    Args:
+      w:        (L, K_out, K, K) linear-domain weights, normalized over (i, j).
+      ln_left:  (B, L, K) log-densities of the "left" product children.
+      ln_right: (B, L, K) log-densities of the "right" product children.
+      impl:     "xla" | "pallas".
+
+    Returns:
+      (B, L, K_out) log-densities  log S[b,l,k] = log sum_ij W[l,k,i,j]
+                                                  exp(ln_left[b,l,i])
+                                                  exp(ln_right[b,l,j]).
+    """
+    if impl == "pallas":
+        from repro.kernels import ops as _kops
+
+        return _kops.log_einsum_exp(w, ln_left, ln_right)
+    if impl == "naive":
+        from repro.core.baseline import log_einsum_exp_naive
+
+        return log_einsum_exp_naive(w, ln_left, ln_right)
+    a = jnp.max(ln_left, axis=-1, keepdims=True)  # (B, L, 1)
+    ap = jnp.max(ln_right, axis=-1, keepdims=True)
+    # Guard fully-marginalized / degenerate rows where the max itself is -inf.
+    a = jnp.maximum(a, NEG_INF)
+    ap = jnp.maximum(ap, NEG_INF)
+    el = jnp.exp(ln_left - a)  # in (0, 1]
+    er = jnp.exp(ln_right - ap)
+    s = jnp.einsum("lkij,bli,blj->blk", w, el, er)
+    return a + ap + jnp.log(s)
+
+
+def log_mix_exp(v: jax.Array, ln: jax.Array, mask: jax.Array) -> jax.Array:
+    """Mixing layer (Appendix B): element-wise mixtures over C children.
+
+    Args:
+      v:    (M, C, K) linear-domain mixing weights, normalized over C;
+            padded children carry zero weight.
+      ln:   (B, M, C, K) log-densities of the C simple-sum children.
+      mask: (M, C) 1.0 for real children, 0.0 for padding.
+
+    Returns:
+      (B, M, K) log-densities  log sum_c v[m,c,k] exp(ln[b,m,c,k]).
+    """
+    ln = jnp.where(mask[None, :, :, None] > 0, ln, NEG_INF)
+    a = jnp.max(ln, axis=2, keepdims=True)  # (B, M, 1, K)
+    a = jnp.maximum(a, NEG_INF)
+    s = jnp.sum(v[None] * jnp.exp(ln - a), axis=2)
+    return a[:, :, 0, :] + jnp.log(s)
+
+
+def normalize_einsum_weights(w: jax.Array, floor: float = 1e-12) -> jax.Array:
+    """Project W onto the simplex over its last two axes (sum-weight constraint)."""
+    w = jnp.maximum(w, floor)
+    return w / jnp.sum(w, axis=(-2, -1), keepdims=True)
+
+
+def normalize_mixing_weights(v: jax.Array, mask: jax.Array,
+                             floor: float = 1e-12) -> jax.Array:
+    """Project V onto the simplex over the child axis, respecting padding."""
+    v = jnp.maximum(v, floor) * mask[:, :, None]
+    return v / jnp.sum(v, axis=1, keepdims=True)

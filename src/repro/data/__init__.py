@@ -1,0 +1,5 @@
+"""Data substrate: synthetic dataset generators + sharded host pipeline."""
+
+from repro.data import pipeline, synthetic
+
+__all__ = ["pipeline", "synthetic"]

@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the performance hot-spots (+ jnp oracles).
+
+  * ``log_einsum_exp`` -- the paper's core op (Eq. 4/5): fused max/exp/matmul/log.
+  * ``flash_attention`` -- online-softmax attention for the LM substrate.
+
+Kernels run compiled on TPU and in interpret mode on CPU; ``ref.py`` holds the
+pure-jnp oracles that define their semantics.
+"""
+
+from repro.kernels import ops, ref
+from repro.kernels.ops import flash_attention, log_einsum_exp
+
+__all__ = ["ops", "ref", "flash_attention", "log_einsum_exp"]

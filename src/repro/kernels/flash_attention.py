@@ -1,0 +1,132 @@
+"""FlashAttention-style fused attention Pallas TPU kernel.
+
+Used by the LM substrate (``repro.models.attention``) as the TPU-target
+implementation of the O(S) -memory attention needed for the 32k prefill
+shapes.  Online-softmax recurrence over KV tiles; the (S_q x S_k) score matrix
+is never materialized in HBM.
+
+Grid = (batch*heads, S_q / block_q, S_k / block_k) with the KV dimension
+innermost: TPU grids execute sequentially over the last axis, so VMEM scratch
+(m, l, acc) carries the running max / normalizer / weighted sum across KV
+tiles (the standard Pallas TPU accumulation pattern).  Causal masking supports
+a query-offset so the same kernel serves training (Sq == Sk) and incremental
+decode (Sq == 1 against a long KV cache).
+
+Validated against ``ref.mha_ref`` in interpret mode; GQA head-repetition is
+handled by the wrapper in ``ops.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *, scale,
+            causal, block_q, block_k, q_offset, kv_len, num_k_blocks):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)  # (block_q, dh)
+    k = k_ref[0].astype(jnp.float32)  # (block_k, dh)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    rows = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    cols = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    valid = cols < kv_len  # mask kv padding columns
+    if causal:
+        valid = valid & (cols <= rows + q_offset)
+    s = jnp.where(valid, s, NEG_INF)
+    m_prev = m_scr[...]  # (block_q, 1)
+    l_prev = l_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)  # (block_q, block_k)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+    v = v_ref[0].astype(jnp.float32)
+    acc_scr[...] = acc_scr[...] * alpha + jnp.dot(
+        p, v, preferred_element_type=jnp.float32
+    )
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(ki == num_k_blocks - 1)
+    def _done():
+        o_ref[0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)).astype(
+            o_ref.dtype
+        )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "scale", "block_q", "block_k", "interpret"),
+)
+def flash_attention_pallas(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    causal: bool = True,
+    scale: float | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """q: (BH, Sq, Dh); k, v: (BH, Sk, Dh) -- heads pre-folded into batch.
+
+    Returns (BH, Sq, Dh) float32.
+    """
+    bh, sq, dh = q.shape
+    sk = k.shape[1]
+    if scale is None:
+        scale = dh**-0.5
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    pad_q = (-sq) % block_q
+    pad_k = (-sk) % block_k
+    q_offset = sk - sq  # decode: queries sit at the end of the kv sequence
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0)))
+    sqp, skp = q.shape[1], k.shape[1]
+    num_k_blocks = skp // block_k
+    kernel = functools.partial(
+        _kernel,
+        scale=scale,
+        causal=causal,
+        block_q=block_q,
+        block_k=block_k,
+        q_offset=q_offset,
+        kv_len=sk,
+        num_k_blocks=num_k_blocks,
+    )
+    out = pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((bh, sqp, dh), jnp.float32),
+        grid=(bh, sqp // block_q, num_k_blocks),
+        in_specs=[
+            pl.BlockSpec((1, block_q, dh), lambda b, qi, ki: (b, qi, 0)),
+            pl.BlockSpec((1, block_k, dh), lambda b, qi, ki: (b, ki, 0)),
+            pl.BlockSpec((1, block_k, dh), lambda b, qi, ki: (b, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, dh), lambda b, qi, ki: (b, qi, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :sq] if pad_q else out

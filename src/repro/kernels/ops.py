@@ -1,0 +1,96 @@
+"""Jitted public wrappers for the Pallas kernels, with backend dispatch.
+
+On TPU the Pallas kernels run compiled; on CPU (this container) they run in
+interpret mode, and the pure-XLA reference paths in ``ref.py`` remain
+available as the production fallback.  ``log_einsum_exp`` carries a custom
+VJP so the kernelized forward still supports the paper's autodiff-EM (the
+backward is expressed with plain einsums; a fused backward kernel is listed
+as future work in EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.log_einsum_exp import log_einsum_exp_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+# --------------------------------------------------------------------------
+# log-einsum-exp: fused forward + einsum backward (custom VJP)
+# --------------------------------------------------------------------------
+@jax.custom_vjp
+def log_einsum_exp(w: jax.Array, ln_left: jax.Array,
+                   ln_right: jax.Array) -> jax.Array:
+    return log_einsum_exp_pallas(w, ln_left, ln_right,
+                                 interpret=not _on_tpu())
+
+
+def _lee_fwd(w, ln_left, ln_right):
+    out = log_einsum_exp(w, ln_left, ln_right)
+    return out, (w, ln_left, ln_right, out)
+
+
+def _lee_bwd(res, g):
+    w, ln_l, ln_r, out = res
+    # d out[b,l,k] / d W[l,k,i,j]      = exp(ln_l_i + ln_r_j - out_k)
+    # d out[b,l,k] / d ln_l[b,l,i]     = sum_j W[l,k,i,j] exp(ln_l_i + ln_r_j - out_k)
+    # Work in the stabilized frame to avoid overflow (the maxes cancel exactly
+    # in the analytic derivative, so this is just Eq. 4 re-applied backwards):
+    a = jnp.max(ln_l, axis=-1, keepdims=True)
+    ap = jnp.max(ln_r, axis=-1, keepdims=True)
+    eln = jnp.exp(ln_l - a)
+    ern = jnp.exp(ln_r - ap)
+    # s[b,l,k] = exp(out - a - ap)
+    s = jnp.exp(out - a - ap)
+    ginv = g / jnp.maximum(s, 1e-38)  # (B, L, K_out)
+    gw = jnp.einsum("blk,bli,blj->lkij", ginv, eln, ern)
+    gl = jnp.einsum("blk,lkij,blj->bli", ginv, w, ern) * eln
+    gr = jnp.einsum("blk,lkij,bli->blj", ginv, w, eln) * ern
+    return gw, gl, gr
+
+
+log_einsum_exp.defvjp(_lee_fwd, _lee_bwd)
+
+
+# --------------------------------------------------------------------------
+# flash attention (GQA-aware wrapper)
+# --------------------------------------------------------------------------
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    causal: bool = True,
+    scale: Optional[float] = None,
+    block_q: int = 128,
+    block_k: int = 128,
+) -> jax.Array:
+    """q: (B, Hq, Sq, Dh); k, v: (B, Hkv, Sk, Dh).  Returns (B, Hq, Sq, Dh)."""
+    b, hq, sq, dh = q.shape
+    hkv = k.shape[1]
+    group = hq // hkv
+    if group > 1:
+        k = jnp.repeat(k, group, axis=1)
+        v = jnp.repeat(v, group, axis=1)
+    qf = q.reshape(b * hq, sq, dh)
+    kf = k.reshape(b * hq, -1, dh)
+    vf = v.reshape(b * hq, -1, dh)
+    out = flash_attention_pallas(
+        qf, kf, vf, causal=causal, scale=scale, block_q=block_q,
+        block_k=block_k, interpret=not _on_tpu(),
+    )
+    return out.reshape(b, hq, sq, dh)
+
+
+# re-export oracles for convenience
+log_einsum_exp_ref = _ref.log_einsum_exp_ref
+mha_ref = _ref.mha_ref

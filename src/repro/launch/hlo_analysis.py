@@ -1,0 +1,227 @@
+"""Scan-aware HLO cost analyzer for the dry-run roofline.
+
+``compiled.cost_analysis()`` counts each ``while`` body ONCE, but our layer
+stacks / attention tiles / CE chunks are all ``lax.scan`` loops -- the real
+FLOPs are body x trip_count.  XLA records ``known_trip_count`` in each while
+op's backend_config after loop simplification, so we reconstruct the true
+per-device totals from the post-SPMD HLO text:
+
+  * matmul FLOPs: every ``dot`` op contributes
+    2 * prod(result_dims) * prod(lhs_contracting_dims)
+  * collective bytes: result-buffer bytes of every all-gather / all-reduce /
+    reduce-scatter / all-to-all / collective-permute
+  * bytes_written: result-buffer bytes of every non-tuple op (an HBM-traffic
+    proxy: every materialized buffer is written once and read >= once; fusion
+    internals correctly stay invisible)
+
+each multiplied by the product of enclosing loop trip counts (computed
+bottom-up over the computation call graph).  Validated against analytic
+FLOP counts in tests/test_roofline.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+_SHAPE_RE = re.compile(r"([a-z]\w*)\[([\d,]*)\]")
+_TRIP_RE = re.compile(r'known_trip_count\\?":{\\?"n\\?":\\?"(\d+)\\?"')
+_BODY_RE = re.compile(r"body=%?([\w\.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w\.\-]+)")
+
+
+def _shape_bytes(text: str) -> float:
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _split_type_and_rest(rhs: str) -> Tuple[str, str]:
+    """Split '<type expr> opcode(...)' -> (type_expr, remainder)."""
+    rhs = rhs.lstrip()
+    if rhs.startswith("("):
+        depth = 0
+        for i, ch in enumerate(rhs):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    return rhs[: i + 1], rhs[i + 1:]
+        return rhs, ""
+    m = re.match(r"([a-z]\w*\[[\d,]*\](?:\{[^}]*\})?)", rhs)
+    if m:
+        return m.group(1), rhs[m.end():]
+    return "", rhs
+
+
+_OPCODE_RE = re.compile(r"^\s*([\w\-]+)\(")
+
+
+@dataclasses.dataclass
+class CompStats:
+    flops: float = 0.0
+    bytes_written: float = 0.0
+    coll: Optional[Dict[str, Dict[str, float]]] = None
+    children: Optional[List[Tuple[str, float]]] = None  # (callee, multiplier)
+
+    def __post_init__(self):
+        if self.coll is None:
+            self.coll = {c: {"count": 0.0, "bytes": 0.0} for c in _COLLECTIVES}
+        if self.children is None:
+            self.children = []
+
+
+def _dot_contract(rest: str, symbols: Dict[str, List[int]]) -> float:
+    """Product of contracted-dim sizes for a dot op.
+
+    Operands are name references (`dot(%a, %b)`); shapes come from the
+    per-computation symbol table.  Falls back to inline shapes if present.
+    """
+    inner_start = rest.find("(")
+    depth, i = 0, inner_start
+    while i < len(rest):
+        if rest[i] == "(":
+            depth += 1
+        elif rest[i] == ")":
+            depth -= 1
+            if depth == 0:
+                break
+        i += 1
+    args = rest[inner_start + 1: i]
+    attrs = rest[i + 1:]
+    shapes = _SHAPE_RE.findall(args)
+    if shapes:
+        lhs_dims = [int(d) for d in shapes[0][1].split(",") if d]
+    else:
+        m = re.match(r"\s*%?([\w\.\-]+)", args)
+        lhs_dims = symbols.get(m.group(1), []) if m else []
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", attrs)
+    contract = 1.0
+    if m and lhs_dims:
+        for idx in m.group(1).split(","):
+            if idx:
+                contract *= lhs_dims[int(idx)]
+    elif not lhs_dims:
+        return 0.0
+    return contract
+
+
+def analyze_hlo(text: str) -> Dict[str, object]:
+    """Returns dict with corrected per-device flops / bytes / collectives."""
+    comps: Dict[str, CompStats] = {}
+    symbols: Dict[str, List[int]] = {}
+    current: Optional[str] = None
+    entry: Optional[str] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        stripped = line.strip()
+        if not stripped:
+            continue
+        # computation header?
+        if line.endswith("{") and ("->" in line or stripped.startswith("ENTRY")):
+            m = re.match(r"\s*(ENTRY\s+)?%?([\w\.\-]+)\s*\(", line)
+            if m:
+                current = m.group(2)
+                comps[current] = CompStats()
+                symbols = {}
+                if m.group(1):
+                    entry = current
+            continue
+        if stripped == "}":
+            continue
+        if current is None:
+            continue
+        m = re.match(r"(ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*)$", stripped)
+        if not m:
+            continue
+        result_name = m.group(2)
+        rhs = m.group(3)
+        type_expr, rest = _split_type_and_rest(rhs)
+        opm = _OPCODE_RE.match(rest)
+        if not opm:
+            continue
+        op = opm.group(1)
+        cs = comps[current]
+        result_bytes = _shape_bytes(type_expr)
+        # record result shape (non-tuple ops) for dot operand lookups
+        shp = _SHAPE_RE.findall(type_expr)
+        if len(shp) == 1 and not type_expr.lstrip().startswith("("):
+            symbols[result_name] = [int(d) for d in shp[0][1].split(",") if d]
+        if op not in ("tuple", "get-tuple-element", "parameter", "constant"):
+            cs.bytes_written += result_bytes
+        if op == "dot":
+            elems = 0.0
+            for dt, dims in _SHAPE_RE.findall(type_expr):
+                n = 1
+                for d in dims.split(","):
+                    if d:
+                        n *= int(d)
+                elems += n
+            cs.flops += 2.0 * elems * _dot_contract(rest, symbols)
+        elif op in _COLLECTIVES:
+            cs.coll[op]["count"] += 1
+            cs.coll[op]["bytes"] += result_bytes
+        elif op == "while":
+            body = _BODY_RE.search(rest)
+            trip = _TRIP_RE.search(rest)
+            n = float(trip.group(1)) if trip else 1.0
+            if body:
+                cs.children.append((body.group(1), n))
+        elif op in ("call", "fusion", "conditional", "async-start"):
+            cm = re.search(r"(?:calls|to_apply)=%?([\w\.\-]+)", rest)
+            if cm and op == "call":
+                cs.children.append((cm.group(1), 1.0))
+            # fusions: bodies are element-wise; their cost is the result
+            # buffer already counted above.  (CPU keeps dots un-fused.)
+
+    # bottom-up totals with memoization
+    memo: Dict[str, Tuple[float, float, Dict[str, Dict[str, float]]]] = {}
+
+    def total(name: str, stack=()) -> Tuple[float, float, Dict]:
+        if name in memo:
+            return memo[name]
+        if name in stack or name not in comps:
+            return 0.0, 0.0, {c: {"count": 0, "bytes": 0.0} for c in _COLLECTIVES}
+        cs = comps[name]
+        f, b = cs.flops, cs.bytes_written
+        coll = {c: dict(v) for c, v in cs.coll.items()}
+        for child, mult in cs.children:
+            cf, cb, cc = total(child, stack + (name,))
+            f += mult * cf
+            b += mult * cb
+            for c in _COLLECTIVES:
+                coll[c]["count"] += mult * cc[c]["count"]
+                coll[c]["bytes"] += mult * cc[c]["bytes"]
+        memo[name] = (f, b, coll)
+        return memo[name]
+
+    if entry is None:
+        # fall back: the computation with the largest own cost
+        entry = max(comps, key=lambda n: comps[n].flops + comps[n].bytes_written)
+    f, b, coll = total(entry)
+    return {
+        "flops": f,
+        "bytes_written": b,
+        "collectives": coll,
+        "collective_bytes": sum(c["bytes"] for c in coll.values()),
+        "entry": entry,
+        "num_computations": len(comps),
+    }

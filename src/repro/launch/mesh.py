@@ -1,0 +1,64 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state; the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import and then calls this.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """16x16 single-pod (256 chips) or 2x16x16 two-pod (512 chips) mesh.
+
+    Axes: ("data", "model") resp. ("pod", "data", "model").  The "pod" axis
+    is the slow DCN axis -- only DP gradient/EM-statistic reductions cross it.
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    need = math.prod(shape)
+    devs = jax.devices()
+    if len(devs) < need:
+        raise RuntimeError(
+            f"need {need} devices for mesh {shape}, found {len(devs)}; "
+            "set XLA_FLAGS=--xla_force_host_platform_device_count=512 "
+            "BEFORE importing jax (see launch/dryrun.py)"
+        )
+    return jax.make_mesh(
+        shape,
+        axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
+        devices=devs[:need],
+    )
+
+
+def make_mesh_for(devices: Optional[Sequence] = None,
+                  model_parallel: int = 16) -> Mesh:
+    """Elastic variant: (data, model) mesh over whatever devices are alive."""
+    devices = list(devices if devices is not None else jax.devices())
+    data = len(devices) // model_parallel
+    if data < 1:
+        data, model_parallel = 1, len(devices)
+    devices = devices[: data * model_parallel]
+    return jax.make_mesh(
+        (data, model_parallel),
+        ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+        devices=devices,
+    )
+
+
+def dp_shards(mesh: Mesh) -> int:
+    """Number of data-parallel shards (pod x data)."""
+    n = 1
+    for name in ("pod", "data"):
+        if name in mesh.shape:
+            n *= mesh.shape[name]
+    return n

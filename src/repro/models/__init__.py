@@ -1,0 +1,6 @@
+"""LM substrate: block-pattern decoder models (attn/mamba/mLSTM/sLSTM x
+dense/MoE) with train / prefill / decode entry points."""
+
+from repro.models import attention, common, lm, mamba, moe, xlstm
+
+__all__ = ["attention", "common", "lm", "mamba", "moe", "xlstm"]

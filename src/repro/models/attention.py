@@ -1,0 +1,154 @@
+"""GQA attention with chunked (flash-style) XLA lowering + Pallas TPU path.
+
+Training / prefill use ``chunked_attention``: a two-level lax scan over query
+and key/value tiles with the online-softmax recurrence, so peak activation
+memory is O(S * tile) instead of O(S^2) -- required for the 32k-prefill dry-run
+cells to fit HBM.  On TPU the same tiles are served by the fused Pallas kernel
+(``repro.kernels.flash_attention``); both paths share the ``ref.mha_ref``
+oracle.
+
+Sharding note (found via the dry-run iteration log, EXPERIMENTS.md §Perf):
+keeping a separate (kv_heads, group) split makes GSPMD reshard through
+{kv x group} tilings that don't divide the model axis, triggering involuntary
+full rematerialization (replication!) inside the scan body.  The baseline
+therefore *repeats* K/V to the full query-head count -- every attention tensor
+then carries the (batch, heads, ...) layout whose heads dim shards cleanly
+over the model axis.  The repeat costs group x more KV activation bytes but
+zero extra HBM-resident cache (the cache stays at kv_heads; the repeat happens
+tile-by-tile inside the scan and fuses).
+
+Decode uses a single-query path against a preallocated KV cache with length
+masking (one dynamic_update_slice per step).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import constraint
+
+NEG_INF = -1e30
+
+
+def chunked_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    causal: bool = True,
+    q_chunk: int = 512,
+    kv_chunk: int = 1024,
+    kv_len: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Online-softmax attention over tiles.
+
+    q: (B, Hq, Sq, Dh), k/v: (B, Hkv, Sk, Dh); GQA KV heads are repeated to
+    Hq (see module docstring).  Returns (B, Hq, Sq, Dh) in q.dtype.
+    """
+    b, hq, sq, dh = q.shape
+    hkv, sk = k.shape[1], k.shape[2]
+    group = hq // hkv
+    scale = dh**-0.5
+    if group > 1:
+        k = jnp.repeat(k, group, axis=1)
+        v = jnp.repeat(v, group, axis=1)
+    q_offset = sk - sq
+
+    q_chunk = min(q_chunk, sq)
+    kv_chunk = min(kv_chunk, sk)
+    pad_q = (-sq) % q_chunk
+    pad_kv = (-sk) % kv_chunk
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    if pad_kv:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_kv), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_kv), (0, 0)))
+    sqp, skp = q.shape[2], k.shape[2]
+    nq, nk = sqp // q_chunk, skp // kv_chunk
+    if kv_len is None:
+        kv_len = jnp.asarray(sk, jnp.int32)
+
+    # (nq, B, H, qc, Dh) / (nk, B, H, kc, Dh): scan-major tiles, pinned to the
+    # (dp, tp) layout so the loop slices never leave their shards
+    tile_spec = (None, "batch", "heads", None, None)
+    qt = constraint(jnp.moveaxis(q.reshape(b, hq, nq, q_chunk, dh), 2, 0), tile_spec)
+    kt = constraint(jnp.moveaxis(k.reshape(b, hq, nk, kv_chunk, dh), 2, 0), tile_spec)
+    vt = constraint(jnp.moveaxis(v.reshape(b, hq, nk, kv_chunk, dh), 2, 0), tile_spec)
+
+    def q_block(args):
+        qi, qc = args  # qc: (B, H, q_chunk, Dh)
+        rows = qi * q_chunk + jnp.arange(q_chunk)[:, None] + q_offset
+
+        def kv_step(carry, args2):
+            m, l, acc = carry
+            ki, kc, vc = args2
+            cols = ki * kv_chunk + jnp.arange(kv_chunk)[None, :]
+            # bf16 inputs, f32 accumulation: full MXU rate, f32-safe softmax
+            s = jnp.einsum(
+                "bhqd,bhkd->bhqk", qc, kc,
+                preferred_element_type=jnp.float32,
+            ) * scale
+            valid = cols < kv_len
+            if causal:
+                valid = valid & (cols <= rows)
+            s = jnp.where(valid[None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+            p = jnp.exp(s - m_new)
+            alpha = jnp.exp(m - m_new)
+            l_new = alpha * l + jnp.sum(p, axis=-1, keepdims=True)
+            acc_new = acc * alpha + jnp.einsum(
+                "bhqk,bhkd->bhqd", p.astype(vc.dtype), vc,
+                preferred_element_type=jnp.float32,
+            )
+            return (m_new, l_new, acc_new), None
+
+        # constrain the online-softmax carries: unconstrained scan carries
+        # propagate as REPLICATED, which made GSPMD all-gather every f32
+        # score tile (0.5 GB x q-blocks x kv-blocks x layers x fwd/remat/bwd
+        # -- the dominant collective in every attention cell, §Perf it.2)
+        spec = ("batch", "heads", None, None)
+        m0 = constraint(jnp.full((b, hq, q_chunk, 1), NEG_INF, jnp.float32), spec)
+        l0 = constraint(jnp.zeros((b, hq, q_chunk, 1), jnp.float32), spec)
+        a0 = constraint(jnp.zeros((b, hq, q_chunk, dh), jnp.float32), spec)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), (jnp.arange(nk), kt, vt)
+        )
+        return acc / jnp.maximum(l, 1e-30)
+
+    out = jax.lax.map(q_block, (jnp.arange(nq), qt))  # (nq, B, H, qc, Dh)
+    out = jnp.moveaxis(out, 0, 2).reshape(b, hq, sqp, dh)
+    out = out[:, :, :sq]
+    return out.astype(q.dtype)
+
+
+def decode_attention(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    kv_len: jax.Array,
+) -> jax.Array:
+    """Single-step decode: q (B, Hq, 1, Dh) vs cache (B, Hkv, S, Dh).
+
+    One masked softmax over the cache -- O(S) memory in the scores, which is
+    the roofline-optimal shape for decode (memory-bound on cache reads).
+    The GQA group dim is folded into the *query rows* of a single (G, S)
+    matmul per kv head, so no repeated-KV materialization ever happens.
+    """
+    b, hq, _, dh = q.shape
+    hkv, s = k_cache.shape[1], k_cache.shape[2]
+    group = hq // hkv
+    scale = dh**-0.5
+    qg = q.reshape(b, hkv, group, dh)
+    scores = jnp.einsum(
+        "bhgd,bhsd->bhgs", qg, k_cache, preferred_element_type=jnp.float32
+    ) * scale
+    mask = jnp.arange(s)[None, None, None, :] < kv_len
+    scores = jnp.where(mask, scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum(
+        "bhgs,bhsd->bhgd", p.astype(v_cache.dtype), v_cache,
+        preferred_element_type=jnp.float32,
+    )
+    return out.reshape(b, hq, 1, dh).astype(q.dtype)

@@ -1,0 +1,75 @@
+"""Shared building blocks for the LM substrate: norms, RoPE, activations."""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    return out.astype(dtype)
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    """(head_dim // 2,) inverse frequencies."""
+    return 1.0 / (
+        theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+    )
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary position embedding.
+
+    x: (B, S, H, Dh); positions: (B, S) or (S,) int32.
+    """
+    dh = x.shape[-1]
+    inv = rope_frequencies(dh, theta)  # (dh/2,)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * inv  # (B, S, dh/2)
+    cos = jnp.cos(ang)[:, :, None, :]  # (B, S, 1, dh/2)
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def activation(name: str):
+    if name == "swiglu":
+        raise ValueError("swiglu is handled structurally in the MLP")
+    if name == "squared_relu":
+        return lambda x: jnp.square(jax.nn.relu(x))
+    if name == "gelu":
+        return jax.nn.gelu
+    if name == "silu":
+        return jax.nn.silu
+    raise ValueError(f"unknown activation {name}")
+
+
+def dense_init(key: jax.Array, shape: Tuple[int, ...], dtype,
+               scale: float | None = None) -> jax.Array:
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    if scale is None:
+        scale = fan_in**-0.5
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def cross_entropy_loss(
+    logits: jax.Array, labels: jax.Array, ignore_id: int = -1
+) -> Tuple[jax.Array, jax.Array]:
+    """Mean token cross entropy in f32.  logits (B, S, V); labels (B, S)."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, jnp.maximum(labels, 0)[..., None], axis=-1
+    )[..., 0]
+    mask = (labels != ignore_id).astype(jnp.float32)
+    nll = (logz - gold) * mask
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.sum(nll) / denom, denom

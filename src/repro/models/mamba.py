@@ -1,0 +1,111 @@
+"""Mamba (S6) selective state-space block, chunked for TPU memory limits.
+
+The selective scan  h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t,  y_t = C_t h_t
++ D x_t  is evaluated as an outer ``lax.scan`` over sequence chunks carrying
+the (B, E, N) state, with an inner ``associative_scan`` inside each chunk.
+The (B, chunk, E, N) discretized tensors therefore exist only per-chunk
+(E = expand * d_model is the TP-sharded axis), keeping activation memory flat
+for the 500k-token long-context cells.
+
+Decode is the O(1) recurrent update on the cached state.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _discretize(x, dt, a_log, b, c):
+    """x: (B, L, E); dt: (B, L, E); a_log: (E, N); b, c: (B, L, N)."""
+    a = -jnp.exp(a_log.astype(jnp.float32))  # (E, N), negative-definite
+    a_bar = jnp.exp(dt[..., None] * a)  # (B, L, E, N)
+    bx = (dt * x)[..., None] * b[:, :, None, :]  # (B, L, E, N)
+    return a_bar, bx
+
+
+def selective_scan(
+    x: jax.Array,
+    dt: jax.Array,
+    a_log: jax.Array,
+    b: jax.Array,
+    c: jax.Array,
+    d_skip: jax.Array,
+    h0: jax.Array | None = None,
+    chunk: int = 128,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y (B, L, E), h_final (B, E, N))."""
+    bsz, l, e = x.shape
+    n = a_log.shape[1]
+    chunk = min(chunk, l)
+    pad = (-l) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+    lp = x.shape[1]
+    nchunks = lp // chunk
+    xs = x.reshape(bsz, nchunks, chunk, e).swapaxes(0, 1)
+    dts = dt.reshape(bsz, nchunks, chunk, e).swapaxes(0, 1)
+    bs = b.reshape(bsz, nchunks, chunk, n).swapaxes(0, 1)
+    cs = c.reshape(bsz, nchunks, chunk, n).swapaxes(0, 1)
+    if h0 is None:
+        h0 = jnp.zeros((bsz, e, n), jnp.float32)
+
+    @jax.checkpoint  # recompute the (B, chunk, E, N) discretized tensors in
+    def chunk_step(h, args):  # the bwd pass instead of storing them per chunk
+        xc, dtc, bc, cc = args  # (B, chunk, ...)
+        a_bar, bx = _discretize(xc, dtc, a_log, bc, cc)  # (B, chunk, E, N)
+
+        def combine(p, q):
+            a1, b1 = p
+            a2, b2 = q
+            return a1 * a2, a2 * b1 + b2
+
+        cum_a, cum_b = jax.lax.associative_scan(
+            combine, (a_bar, bx.astype(jnp.float32)), axis=1
+        )
+        hs = cum_b + cum_a * h[:, None]  # (B, chunk, E, N)
+        y = jnp.einsum("blen,bln->ble", hs, cc.astype(jnp.float32))
+        return hs[:, -1], y
+
+    h_final, ys = jax.lax.scan(chunk_step, h0, (xs, dts, bs, cs))
+    y = ys.swapaxes(0, 1).reshape(bsz, lp, e)[:, :l]
+    y = y + d_skip.astype(jnp.float32) * x[:, :l].astype(jnp.float32)
+    return y, h_final
+
+
+def selective_step(
+    x: jax.Array,
+    dt: jax.Array,
+    a_log: jax.Array,
+    b: jax.Array,
+    c: jax.Array,
+    d_skip: jax.Array,
+    h: jax.Array,
+) -> Tuple[jax.Array, jax.Array]:
+    """Single-token decode.  x, dt: (B, E); b, c: (B, N); h: (B, E, N)."""
+    a = -jnp.exp(a_log.astype(jnp.float32))
+    a_bar = jnp.exp(dt[..., None] * a)  # (B, E, N)
+    bx = (dt * x)[..., None] * b[:, None, :]
+    h_new = a_bar * h + bx.astype(jnp.float32)
+    y = jnp.einsum("ben,bn->be", h_new, c.astype(jnp.float32))
+    y = y + d_skip.astype(jnp.float32) * x.astype(jnp.float32)
+    return y, h_new
+
+
+def causal_conv1d(x: jax.Array, w: jax.Array, state: jax.Array | None = None):
+    """Depthwise causal conv over the sequence.
+
+    x: (B, L, E); w: (K, E).  Returns (y (B, L, E), new_state (B, K-1, E)).
+    """
+    k = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)  # (B, K-1+L, E)
+    y = sum(xp[:, i : i + x.shape[1]] * w[i][None, None, :] for i in range(k))
+    new_state = xp[:, -(k - 1) :] if k > 1 else state
+    return y, new_state

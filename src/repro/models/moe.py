@@ -1,0 +1,239 @@
+"""Mixture-of-Experts layer: top-k routing with two dispatch strategies.
+
+``gather`` (default): sort-based dropless-style dispatch.  Token->expert
+assignments are sorted, ranked within expert via a cumulative count, and
+scattered into a per-group (E, C, D) buffer; expert FFNs run as one batched
+einsum over the expert axis (MXU-friendly, EP-shardable); results gather back
+with the router weights.  No (T x E x C) one-hot tensor is ever materialized
+-- at kimi-k2 scale (E=384) the classic GShard dispatch einsum would cost
+O(T^2 * topk * d) redundant FLOPs and a ~10^13-element dispatch tensor, which
+is why the gather path is the baseline here (recorded in DESIGN.md).
+
+``dense`` (reference): the GShard/Switch one-hot dispatch-einsum formulation,
+kept for small expert counts as a cross-check oracle and for the §Perf
+comparison.
+
+Capacity: C = ceil(T * topk / E * capacity_factor); overflow tokens are
+dropped (classic capacity-style MoE).  An auxiliary load-balancing loss
+(Switch-style) is returned alongside.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import constraint
+
+
+def router(x: jax.Array, w_router: jax.Array, top_k: int):
+    """x: (T, D); w_router: (D, E).  Returns (weights (T,k), experts (T,k), aux)."""
+    logits = jnp.einsum("td,de->te", x.astype(jnp.float32), w_router.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, experts = jax.lax.top_k(probs, top_k)  # (T, k)
+    weights = weights / jnp.sum(weights, axis=-1, keepdims=True)
+    # Switch-style load balance loss: E * sum_e f_e * p_e
+    e = w_router.shape[1]
+    me = jnp.mean(probs, axis=0)  # (E,)
+    ce = jnp.mean(
+        jax.nn.one_hot(experts[:, 0], e, dtype=jnp.float32), axis=0
+    )
+    aux = e * jnp.sum(me * ce)
+    return weights, experts, aux
+
+
+def moe_ffn_gather(
+    x: jax.Array,
+    w_router: jax.Array,
+    w_gate: jax.Array,
+    w_up: jax.Array,
+    w_down: jax.Array,
+    top_k: int,
+    capacity_factor: float = 1.25,
+) -> Tuple[jax.Array, jax.Array]:
+    """Sort-based MoE.  x: (T, D); expert weights (E, D, F) / (E, F, D).
+
+    Returns (out (T, D), aux_loss scalar).
+    """
+    t, d = x.shape
+    e, _, f = w_gate.shape
+    weights, experts, aux = router(x, w_router, top_k)
+    capacity = int(max(1, -(-t * top_k // e) * capacity_factor))
+    stok, sw, se, rank, keep = _expert_slots(
+        experts, weights, t, top_k, e, capacity
+    )
+    slot = se * capacity + jnp.where(keep, rank, 0)  # dropped -> slot 0 w/ 0 weight
+    buf_idx = jnp.where(keep, slot, e * capacity)  # trash row
+
+    # dispatch: (E*C+1, D) scatter of token activations
+    xb = jnp.zeros((e * capacity + 1, d), x.dtype).at[buf_idx].set(x[stok])
+    xb = xb[:-1].reshape(e, capacity, d)
+    # pin the buffer to the EP layout *here*: the scatter from token space to
+    # expert space is the all-to-all; without this constraint GSPMD leaves E
+    # replicated and moves group-sized buffers instead (§Perf iteration log)
+    xb = constraint(xb, ("expert", None, None))
+    # expert FFN (swiglu), batched over E -- MXU einsum, EP-shardable
+    g = jnp.einsum("ecd,edf->ecf", xb, w_gate)
+    u = jnp.einsum("ecd,edf->ecf", xb, w_up)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    h = constraint(h, ("expert", None, "expert_mlp"))
+    yb = jnp.einsum("ecf,efd->ecd", h, w_down)
+    yb = constraint(yb, ("expert", None, None)).reshape(e * capacity, d)
+    yb = jnp.concatenate([yb, jnp.zeros((1, d), yb.dtype)], axis=0)
+    # combine: weighted gather-scatter back to tokens
+    contrib = yb[buf_idx] * jnp.where(keep, sw, 0.0)[:, None].astype(yb.dtype)
+    out = jnp.zeros((t, d), x.dtype).at[stok].add(contrib)
+    return out, aux
+
+
+def _expert_slots(experts, weights, t, top_k, e, capacity):
+    """Shared sort-based slot assignment.  Returns (stok, sw, se, rank, keep)
+    sorted by expert id; rank is the position within the expert's capacity."""
+    flat_e = experts.reshape(-1)
+    flat_w = weights.reshape(-1)
+    flat_tok = jnp.repeat(jnp.arange(t), top_k)
+    order = jnp.argsort(flat_e)
+    se, stok, sw = flat_e[order], flat_tok[order], flat_w[order]
+    counts = jnp.zeros((e,), jnp.int32).at[flat_e].add(1)
+    offsets = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(counts)[:-1]])
+    rank = jnp.arange(t * top_k, dtype=jnp.int32) - offsets[se]
+    keep = rank < capacity
+    return stok, sw, se, rank, keep
+
+
+def moe_ffn_shard_map(
+    x: jax.Array,
+    w_router: jax.Array,
+    w_gate: jax.Array,
+    w_up: jax.Array,
+    w_down: jax.Array,
+    top_k: int,
+    capacity_factor: float,
+    dp_axes,
+    ep_axis: str,
+    fsdp_axes,
+) -> Tuple[jax.Array, jax.Array]:
+    """Expert parallelism with explicit all-to-alls (the production path).
+
+    GSPMD cannot partition a data-dependent scatter across the expert axis --
+    it falls back to replicating group-sized buffers (measured: 18.8 GB
+    all-gathers per MoE layer at kimi-k2 scale, EXPERIMENTS.md §Perf).  This
+    path hand-rolls the canonical EP schedule inside shard_map:
+
+      local routing -> local scatter into per-destination send buffer
+      -> all_to_all(model) -> local expert FFN (weights all-gathered over the
+      fsdp axis if sharded there) -> all_to_all(model) back -> local combine.
+
+    Per-device exchanged bytes are the true MoE volume
+    T_local * topk * cf * d_model * 2 per direction -- ~30x less than what the
+    scatter lowering moved.
+
+    x: (B, S, D) GLOBAL array (inside jit); weights as in moe_ffn_gather.
+
+    Token partitioning: the sequence dim is sharded over the EP (model) axis
+    whenever it divides -- each of the dp x ep shards routes its own
+    B/dp x S/ep token slab (this also lines up with the SP residual layout,
+    so no resharding on entry).  When S doesn't divide (decode steps), tokens
+    are replicated over EP and the dispatch is redundant ep-fold -- harmless
+    for 1-token steps, and recorded in the roofline notes.
+    """
+    e = w_gate.shape[0]
+    f = w_gate.shape[2]
+    d = x.shape[-1]
+    mesh = jax.sharding.get_abstract_mesh()
+    ep_size = dict(mesh.shape)[ep_axis]
+    shard_seq = x.shape[1] % ep_size == 0 and x.shape[1] >= ep_size
+
+    def body(x_l, r_l, wg_l, wu_l, wd_l):
+        e_loc = wg_l.shape[0]
+        ep = e // e_loc
+        if fsdp_axes and wg_l.shape[1] != d:
+            wg_l = jax.lax.all_gather(wg_l, fsdp_axes, axis=1, tiled=True)
+            wu_l = jax.lax.all_gather(wu_l, fsdp_axes, axis=1, tiled=True)
+            wd_l = jax.lax.all_gather(wd_l, fsdp_axes, axis=2, tiled=True)
+        b_l, s_l = x_l.shape[0], x_l.shape[1]
+        t = b_l * s_l
+        xt = x_l.reshape(t, d)
+        weights, experts, aux = router(xt, r_l, top_k)
+        cap = int(max(1, -(-t * top_k // e) * capacity_factor))
+        stok, sw, se, rank, keep = _expert_slots(experts, weights, t, top_k, e, cap)
+        dst = se // e_loc
+        slot = (se % e_loc) * cap + rank  # slot within the destination shard
+        c_dst = e_loc * cap
+        buf_idx = jnp.where(keep, dst * c_dst + slot, ep * c_dst)
+        send = jnp.zeros((ep * c_dst + 1, d), x_l.dtype).at[buf_idx].set(xt[stok])
+        send = send[:-1].reshape(ep, c_dst, d)
+        recv = jax.lax.all_to_all(send, ep_axis, split_axis=0, concat_axis=0,
+                                  tiled=False)
+        # (ep_src, e_loc, cap, D) -> (e_loc, ep_src * cap, D)
+        xb = recv.reshape(ep, e_loc, cap, d).swapaxes(0, 1).reshape(
+            e_loc, ep * cap, d)
+        g = jnp.einsum("ecd,edf->ecf", xb, wg_l)
+        u = jnp.einsum("ecd,edf->ecf", xb, wu_l)
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(x_l.dtype) * u
+        yb = jnp.einsum("ecf,efd->ecd", h, wd_l)
+        back = yb.reshape(e_loc, ep, cap, d).swapaxes(0, 1).reshape(ep, c_dst, d)
+        ret = jax.lax.all_to_all(back, ep_axis, split_axis=0, concat_axis=0,
+                                 tiled=False)
+        ret = jnp.concatenate(
+            [ret.reshape(ep * c_dst, d), jnp.zeros((1, d), ret.dtype)], 0)
+        contrib = ret[buf_idx] * jnp.where(keep, sw, 0.0)[:, None].astype(ret.dtype)
+        out = jnp.zeros((t, d), x_l.dtype).at[stok].add(contrib)
+        # aux is a local mean over this dp shard's tokens; average over dp
+        if dp_axes:
+            aux = jax.lax.pmean(aux, dp_axes)
+        aux = jax.lax.pmean(aux, ep_axis)
+        return out.reshape(b_l, s_l, d), aux
+
+    from jax.sharding import PartitionSpec as P
+
+    dp = dp_axes if dp_axes else None
+    w_fsdp = fsdp_axes if fsdp_axes else None
+    seq = ep_axis if shard_seq else None
+    in_specs = (
+        P(dp, seq, None),               # x: batch over dp, seq over ep (SP)
+        P(None, None),                  # router: replicated
+        P(ep_axis, w_fsdp, None),       # wg (E, D, F)
+        P(ep_axis, w_fsdp, None),       # wu
+        P(ep_axis, None, w_fsdp),       # wd (E, F, D)
+    )
+    out_specs = (P(dp, seq, None), P())
+    fn = jax.shard_map(body, in_specs=in_specs, out_specs=out_specs,
+                       check_vma=False)
+    return fn(x, w_router, w_gate, w_up, w_down)
+
+
+def moe_ffn_dense(
+    x: jax.Array,
+    w_router: jax.Array,
+    w_gate: jax.Array,
+    w_up: jax.Array,
+    w_down: jax.Array,
+    top_k: int,
+    capacity_factor: float = 1.25,
+) -> Tuple[jax.Array, jax.Array]:
+    """GShard-style one-hot dispatch einsum (reference; small E only)."""
+    t, d = x.shape
+    e, _, f = w_gate.shape
+    weights, experts, aux = router(x, w_router, top_k)
+    capacity = int(max(1, -(-t * top_k // e) * capacity_factor))
+    oh = jax.nn.one_hot(experts, e, dtype=jnp.int32)  # (T, k, E)
+    pos = jnp.cumsum(oh.reshape(t * top_k, e), axis=0).reshape(t, top_k, e) - 1
+    pos = jnp.sum(pos * oh, axis=-1)  # (T, k) position in expert
+    keep = pos < capacity
+    disp = (
+        jax.nn.one_hot(experts, e, dtype=x.dtype)[:, :, :, None]
+        * jax.nn.one_hot(jnp.where(keep, pos, 0), capacity, dtype=x.dtype)[:, :, None, :]
+        * keep[:, :, None, None]
+    )  # (T, k, E, C)
+    comb = disp * weights[:, :, None, None].astype(x.dtype)
+    xb = jnp.einsum("tkec,td->ecd", disp, x)
+    g = jnp.einsum("ecd,edf->ecf", xb, w_gate)
+    u = jnp.einsum("ecd,edf->ecf", xb, w_up)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    yb = jnp.einsum("ecf,efd->ecd", h, w_down)
+    out = jnp.einsum("tkec,ecd->td", comb, yb)
+    return out, aux

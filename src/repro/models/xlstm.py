@@ -1,0 +1,227 @@
+"""xLSTM cells: mLSTM (matrix memory) and sLSTM (scalar memory).
+
+Both use the stabilized exponential gating of Beck et al. (2024):
+
+    m_t = max(logf_t + m_{t-1}, logi_t)
+    f'  = exp(logf + m_{t-1} - m_t),   i' = exp(logi - m_t)
+
+mLSTM state: per-head matrix C (dv x dk) + normalizer n (dk) -- a gated
+linear-attention recurrence, O(1) per decode token.  sLSTM state: scalar
+cells with block-diagonal (per-head) recurrent connections -- strictly
+sequential by construction (the paper's point: it cannot be parallelized, so
+we lower it as a chunked lax.scan and accept the serial latency; see
+DESIGN.md §8 for the production note).
+
+Chunking: outer scan over sequence chunks with a rematerialized inner scan,
+so the backward pass stores only per-chunk carries (required at 4k train /
+500k decode shapes).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def scan_chunked(step_fn, carry, xs, chunk: int, length: int):
+    """lax.scan over time in rematerialized chunks.  xs pytree: (L, ...).
+
+    Length is padded up to a chunk multiple; padded steps are masked so they
+    neither touch the carry nor appear in the outputs.
+    """
+    chunk = min(chunk, length)
+    pad = (-length) % chunk
+    valid = jnp.arange(length + pad) < length
+    if pad:
+        xs = jax.tree_util.tree_map(
+            lambda a: jnp.pad(a, ((0, pad),) + ((0, 0),) * (a.ndim - 1)), xs
+        )
+    nchunks = (length + pad) // chunk
+    xs_c = jax.tree_util.tree_map(
+        lambda a: a.reshape((nchunks, chunk) + a.shape[1:]), xs
+    )
+    valid_c = valid.reshape(nchunks, chunk)
+
+    def masked_step(c, x_and_valid):
+        x, ok = x_and_valid
+        c_new, y = step_fn(c, x)
+        c_out = jax.tree_util.tree_map(
+            lambda new, old: jnp.where(ok, new, old), c_new, c
+        )
+        return c_out, y
+
+    @jax.checkpoint
+    def chunk_body(c, args):
+        return jax.lax.scan(masked_step, c, args)
+
+    carry, ys = jax.lax.scan(chunk_body, carry, (xs_c, valid_c))
+    ys = jax.tree_util.tree_map(
+        lambda a: a.reshape((nchunks * chunk,) + a.shape[2:])[:length], ys
+    )
+    return carry, ys
+
+
+# ---------------------------------------------------------------- mLSTM cell
+def mlstm_step(carry, inp):
+    """carry: (C (B,H,dv,dk), n (B,H,dk), m (B,H)).
+    inp: dict q, k, v (B,H,dh), li, lf (B,H) log-gates."""
+    c, n, m = carry
+    q, k, v, li, lf = inp["q"], inp["k"], inp["v"], inp["li"], inp["lf"]
+    m_new = jnp.maximum(lf + m, li)
+    fp = jnp.exp(lf + m - m_new)[..., None]  # (B,H,1)
+    ip = jnp.exp(li - m_new)[..., None]
+    c_new = fp[..., None] * c + ip[..., None] * jnp.einsum("bhv,bhk->bhvk", v, k)
+    n_new = fp * n + ip * k
+    num = jnp.einsum("bhvk,bhk->bhv", c_new, q)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n_new, q)), 1.0)
+    h = num / den[..., None]
+    return (c_new, n_new, m_new), h
+
+
+def mlstm_sequence(q, k, v, li, lf, carry=None, chunk: int = 64):
+    """q,k,v: (B, L, H, dh) f32; li, lf: (B, L, H).  Returns (y (B,L,H,dh), carry)."""
+    bsz, l, h, dh = q.shape
+    if carry is None:
+        carry = (
+            jnp.zeros((bsz, h, dh, dh), jnp.float32),
+            jnp.zeros((bsz, h, dh), jnp.float32),
+            jnp.full((bsz, h), -1e30, jnp.float32),
+        )
+    xs = {
+        "q": q.swapaxes(0, 1),
+        "k": k.swapaxes(0, 1),
+        "v": v.swapaxes(0, 1),
+        "li": li.swapaxes(0, 1),
+        "lf": lf.swapaxes(0, 1),
+    }
+    carry, ys = scan_chunked(mlstm_step, carry, xs, chunk, l)
+    return ys.swapaxes(0, 1), carry
+
+
+def mlstm_sequence_chunked(q, k, v, li, lf, chunk: int = 128):
+    """Chunkwise-parallel mLSTM (GLA/SSD-style), exact same function as the
+    recurrent form but O(S/c) state materializations instead of O(S).
+
+    Derivation: with b_t = sum_{r<=t} log f_r (cumulative log-forget) and the
+    running stabilizer m_t = max_{s<=t}(log i_s + b_t - b_s),
+
+        C_t = sum_s exp(log i_s + b_t - b_s - m_t) v_s k_s^T
+        n_t = sum_s exp(log i_s + b_t - b_s - m_t) k_s
+
+    so within a chunk the contribution splits into an intra-chunk masked
+    (c x c) score matrix (an MXU matmul) plus one inter-chunk term through the
+    stabilized boundary state (S = C~ exp(-m_state), n~, m_state).  The state
+    is updated ONCE per chunk -- this removes the 100+TB/device HBM traffic of
+    the per-step matrix-state writes (EXPERIMENTS.md §Perf, xlstm hillclimb).
+
+    q,k,v: (B, L, H, dh) f32; li, lf: (B, L, H) log-gates.
+    Returns (y (B, L, H, dh), carry (C, n, m)) -- carry matches mlstm_step's.
+    """
+    bsz, l, h, dh = q.shape
+    chunk = min(chunk, l)
+    pad = (-l) % chunk
+    if pad:
+        padt = lambda a: jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
+        q, k, v = padt(q), padt(k), padt(v)
+        li = jnp.pad(li, ((0, 0), (0, pad), (0, 0)),
+                     constant_values=-1e30)  # i=0
+        lf = jnp.pad(lf, ((0, 0), (0, pad), (0, 0)))  # f=1: carry intact
+    lp = q.shape[1]
+    nc = lp // chunk
+
+    def to_chunks(a):
+        return a.reshape(bsz, nc, chunk, *a.shape[2:]).swapaxes(0, 1)
+
+    qc, kc, vc = to_chunks(q), to_chunks(k), to_chunks(v)
+    lic, lfc = to_chunks(li), to_chunks(lf)
+
+    def chunk_step(carry, args):
+        s_state, n_state, m_state = carry  # (B,H,dh,dh), (B,H,dh), (B,H)
+        qb, kb, vb, lib, lfb = args  # (B, c, H, ...)
+        b_cum = jnp.cumsum(lfb, axis=1)  # (B, c, H)
+        # intra-chunk scores a[t,u] = li_u + b_t - b_u   (u <= t)
+        a = (
+            lib[:, None, :, :] + b_cum[:, :, None, :] - b_cum[:, None, :, :]
+        )  # (B, t, u, H)
+        tril = jnp.tril(jnp.ones((chunk, chunk), bool))
+        a = jnp.where(tril[None, :, :, None], a, -1e30)
+        # stabilizer: m_t = max(m_state + b_t, max_u a[t,u])
+        m_t = jnp.maximum(m_state[:, None] + b_cum, jnp.max(a, axis=2))
+        m_t = jnp.maximum(m_t, -1e30)  # guard all -inf rows
+        gates = jnp.exp(a - m_t[:, :, None, :])  # (B, t, u, H)
+        inter = jnp.exp(b_cum + m_state[:, None] - m_t)  # (B, t, H)
+        qk = jnp.einsum("bthd,buhd->btuh", qb, kb)  # (B, t, u, H)
+        num = jnp.einsum("btuh,buhd->bthd", gates * qk, vb)
+        num = num + inter[..., None] * jnp.einsum("bhvk,bthk->bthv", s_state, qb)
+        den = jnp.einsum("btuh,buhd->bthd", gates, kb)
+        den = den + inter[..., None] * n_state[:, None]
+        dq = jnp.einsum("bthd,bthd->bth", den, qb)
+        y = num / jnp.maximum(jnp.abs(dq), 1.0)[..., None]
+        # boundary state update (once per chunk)
+        b_end = b_cum[:, -1]  # (B, H)
+        m_new = m_t[:, -1]
+        w_state = jnp.exp(b_end + m_state - m_new)  # (B, H)
+        w_in = jnp.exp(
+            lib + b_end[:, None] - b_cum - m_new[:, None]
+        )  # (B, c, H)
+        s_new = (
+            w_state[:, :, None, None] * s_state
+            + jnp.einsum("buh,buhv,buhk->bhvk", w_in, vb, kb)
+        )
+        n_new = w_state[..., None] * n_state + jnp.einsum(
+            "buh,buhk->bhk", w_in, kb
+        )
+        return (s_new, n_new, m_new), y
+
+    carry0 = (
+        jnp.zeros((bsz, h, dh, dh), jnp.float32),
+        jnp.zeros((bsz, h, dh), jnp.float32),
+        jnp.full((bsz, h), -1e30, jnp.float32),
+    )
+    chunk_step = jax.checkpoint(chunk_step)
+    carry, ys = jax.lax.scan(chunk_step, carry0, (qc, kc, vc, lic, lfc))
+    y = ys.swapaxes(0, 1).reshape(bsz, lp, h, dh)[:, :l]
+    return y, carry
+
+
+# ---------------------------------------------------------------- sLSTM cell
+def slstm_step_factory(r_blocks):
+    """r_blocks: dict of (H, dh, dh) recurrent mats for gates i, f, z, o."""
+
+    def step(carry, inp):
+        c, n, m, h = carry  # each (B, H, dh) except m (B, H, dh)
+        def rec(name):
+            return inp[name] + jnp.einsum("bhd,hde->bhe", h, r_blocks[name])
+
+        li = rec("i")
+        lf = rec("f")
+        z = jnp.tanh(rec("z"))
+        o = jax.nn.sigmoid(rec("o"))
+        m_new = jnp.maximum(lf + m, li)
+        fp = jnp.exp(lf + m - m_new)
+        ip = jnp.exp(li - m_new)
+        c_new = fp * c + ip * z
+        n_new = fp * n + ip
+        h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+        return (c_new, n_new, m_new, h_new), h_new
+
+    return step
+
+
+def slstm_sequence(wx, r_blocks, carry=None, chunk: int = 64):
+    """wx: dict i/f/z/o -> (B, L, H, dh) input projections (W x + b).
+
+    Returns (y (B, L, H, dh), carry)."""
+    bsz, l, h, dh = wx["i"].shape
+    if carry is None:
+        carry = tuple(
+            jnp.zeros((bsz, h, dh), jnp.float32) if i != 2
+            else jnp.full((bsz, h, dh), -1e30, jnp.float32)
+            for i in range(4)
+        )
+    xs = {k: v.swapaxes(0, 1) for k, v in wx.items()}
+    step = slstm_step_factory(r_blocks)
+    carry, ys = scan_chunked(step, carry, xs, chunk, l)
+    return ys.swapaxes(0, 1), carry

@@ -1,0 +1,6 @@
+"""Optimizers: pure-JAX AdamW (f32/bf16/int8 moment state) + gradient
+compression for the DP/DCN axes."""
+
+from repro.optim import adamw, compression
+
+__all__ = ["adamw", "compression"]

@@ -1,0 +1,146 @@
+"""EiNet behaviour tests: normalization, parity, marginals, sampling."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    Bernoulli,
+    EiNet,
+    NaiveEiNet,
+    Normal,
+    poon_domingos,
+    random_binary_trees,
+)
+
+
+@pytest.fixture(scope="module")
+def rat_net():
+    g = random_binary_trees(12, 2, 3, seed=0)
+    net = EiNet(g, num_sums=5, exponential_family=Normal())
+    params = net.init(jax.random.PRNGKey(0))
+    return net, params
+
+
+def test_full_marginalization_is_normalized(rat_net):
+    """Integrating everything out must give exactly 1 (log 1 = 0): the
+    self-normalization property of smooth+decomposable PCs (paper §2)."""
+    net, params = rat_net
+    x = jnp.zeros((4, net.num_vars))
+    mask = jnp.zeros((4, net.num_vars), dtype=bool)
+    ll = net.log_likelihood(params, x, mask)
+    np.testing.assert_allclose(np.asarray(ll), 0.0, atol=1e-5)
+
+
+def test_naive_baseline_parity(rat_net):
+    """EiNet einsum layers == LibSPN-style log-sum-exp layers (Table 1 logic)."""
+    net, params = rat_net
+    naive = NaiveEiNet(net.graph, num_sums=5, exponential_family=Normal())
+    x = jax.random.normal(jax.random.PRNGKey(1), (16, net.num_vars))
+    a = net.log_likelihood(params, x)
+    b = naive.log_likelihood(params, x)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)
+
+
+def test_pallas_kernel_parity(rat_net):
+    net, params = rat_net
+    kern = EiNet(net.graph, num_sums=5, exponential_family=Normal(),
+                 impl="pallas")
+    x = jax.random.normal(jax.random.PRNGKey(2), (8, net.num_vars))
+    a = net.log_likelihood(params, x)
+    b = kern.log_likelihood(params, x)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)
+
+
+def test_bernoulli_exact_marginalization():
+    """Brute-force check of exact inference: sum_x P(x) = 1 and
+    marginal p(x_A) = sum_{x_B} p(x_A, x_B) on a small Bernoulli EiNet."""
+    g = random_binary_trees(6, 1, 2, seed=3)
+    net = EiNet(g, num_sums=3, exponential_family=Bernoulli())
+    params = net.init(jax.random.PRNGKey(3))
+    # all 64 assignments
+    grid = np.array(
+        [[(i >> d) & 1 for d in range(6)] for i in range(64)], np.float32
+    )
+    ll = np.asarray(net.log_likelihood(params, jnp.asarray(grid)))
+    total = np.exp(ll).sum()
+    np.testing.assert_allclose(total, 1.0, rtol=1e-4)
+    # marginal over last 3 vars via evidence mask == explicit sum
+    mask = jnp.asarray([[True] * 3 + [False] * 3] * 8)
+    x_a = grid[:8].copy()
+    marg = np.exp(np.asarray(net.log_likelihood(params, jnp.asarray(x_a), mask)))
+    brute = np.zeros(8)
+    for i in range(8):
+        sel = (grid[:, :3] == grid[i, :3]).all(axis=1)
+        brute[i] = np.exp(ll[sel]).sum()
+    np.testing.assert_allclose(marg, brute, rtol=1e-4)
+
+
+def test_conditional_log_likelihood_consistency(rat_net):
+    """log p(q|e) + log p(e) == log p(q, e) (Eq. 1, exactly)."""
+    net, params = rat_net
+    x = jax.random.normal(jax.random.PRNGKey(4), (5, net.num_vars))
+    qmask = jnp.zeros((5, net.num_vars), bool).at[:, :6].set(True)
+    emask = jnp.zeros((5, net.num_vars), bool).at[:, 6:].set(True)
+    cond = net.conditional_log_likelihood(params, x, qmask, emask)
+    joint = net.log_likelihood(params, x, qmask | emask)
+    ev = net.log_likelihood(params, x, emask)
+    np.testing.assert_allclose(np.asarray(cond), np.asarray(joint - ev), atol=1e-5)
+
+
+def test_sampling_shapes_and_evidence(rat_net):
+    net, params = rat_net
+    s = net.sample(params, jax.random.PRNGKey(5), 7)
+    assert s.shape == (7, net.num_vars)
+    assert np.isfinite(np.asarray(s)).all()
+    x = jax.random.normal(jax.random.PRNGKey(6), (7, net.num_vars))
+    ev = jnp.zeros((7, net.num_vars), bool).at[:, ::2].set(True)
+    cs = net.conditional_sample(params, jax.random.PRNGKey(7), x, ev)
+    np.testing.assert_array_equal(
+        np.asarray(cs)[:, ::2], np.asarray(x)[:, ::2]
+    )
+    # argmax mode is deterministic
+    a1 = net.conditional_sample(params, jax.random.PRNGKey(8), x, ev, mode="argmax")
+    a2 = net.conditional_sample(params, jax.random.PRNGKey(9), x, ev, mode="argmax")
+    np.testing.assert_allclose(np.asarray(a1), np.asarray(a2))
+
+
+def test_sampling_distribution_matches_density():
+    """Samples from a Bernoulli EiNet should have empirical frequencies
+    close to the exact per-assignment probabilities."""
+    g = random_binary_trees(4, 1, 2, seed=10)
+    net = EiNet(g, num_sums=3, exponential_family=Bernoulli())
+    params = net.init(jax.random.PRNGKey(10))
+    n = 20_000
+    s = np.asarray(net.sample(params, jax.random.PRNGKey(11), n))
+    codes = (s * (2 ** np.arange(4))).sum(axis=1).astype(int)
+    emp = np.bincount(codes, minlength=16) / n
+    grid = np.array([[(i >> d) & 1 for d in range(4)] for i in range(16)], np.float32)
+    exact = np.exp(np.asarray(net.log_likelihood(params, jnp.asarray(grid))))
+    np.testing.assert_allclose(emp, exact, atol=0.02)
+
+
+def test_pd_einet_forward():
+    g = poon_domingos(4, 4, delta=2, num_channels=3, axes=("w",))
+    net = EiNet(g, num_sums=4, exponential_family=Normal())
+    params = net.init(jax.random.PRNGKey(12))
+    x = jax.random.normal(jax.random.PRNGKey(13), (3, g.num_vars))
+    ll = net.log_likelihood(params, x)
+    assert ll.shape == (3,)
+    assert np.isfinite(np.asarray(ll)).all()
+    mask = jnp.zeros((3, g.num_vars), bool)
+    np.testing.assert_allclose(
+        np.asarray(net.log_likelihood(params, x, mask)), 0.0, atol=1e-4
+    )
+
+
+def test_num_classes_root():
+    g = random_binary_trees(8, 2, 2, seed=1)
+    net = EiNet(g, num_sums=4, num_classes=3, exponential_family=Normal())
+    params = net.init(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (5, 8))
+    root = net.forward(params, x)
+    assert root.shape == (5, 3)
+    ll = net.log_likelihood(params, x)
+    assert ll.shape == (5,)

@@ -1,0 +1,131 @@
+"""EM tests: autodiff-EM correctness, monotonicity, stochastic EM."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    Bernoulli,
+    EMConfig,
+    EiNet,
+    Normal,
+    accumulate_statistics,
+    em_statistics,
+    em_update,
+    m_step,
+    random_binary_trees,
+    stochastic_em_update,
+    zeros_like_statistics,
+)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    g = random_binary_trees(10, 2, 2, seed=0)
+    net = EiNet(g, num_sums=4, exponential_family=Normal())
+    params = net.init(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (64, 10)) * 1.5 + 0.3
+    return net, params, x
+
+
+def test_em_statistics_shapes_and_counts(setup):
+    net, params, x = setup
+    stats = em_statistics(net, params, x)
+    # expected sum-node counts: for each root-layer entry, statistics sum to
+    # the total expected number of uses == batch size (root is used once per x)
+    top = stats["n_einsum"][-1]
+    if net.pair_specs[-1].mix_global is None:
+        np.testing.assert_allclose(float(jnp.sum(top)), x.shape[0], rtol=1e-4)
+    # leaf responsibilities: for each variable, total leaf posterior == batch
+    per_var = np.asarray(jnp.sum(stats["s_den"], axis=(1, 2)))
+    np.testing.assert_allclose(per_var, x.shape[0], rtol=1e-4)
+
+
+def test_full_batch_em_is_monotone(setup):
+    """Full-batch EM must not decrease the training likelihood (§3.5)."""
+    net, params, x = setup
+    prev = -np.inf
+    p = params
+    for _ in range(8):
+        p, ll = em_update(net, p, x)
+        ll = float(ll)
+        assert ll >= prev - 1e-3, f"EM decreased LL: {prev} -> {ll}"
+        prev = ll
+
+
+def test_em_improves_over_init(setup):
+    net, params, x = setup
+    _, ll0 = em_update(net, params, x)
+    p = params
+    for _ in range(10):
+        p, ll = em_update(net, p, x)
+    assert float(ll) > float(ll0) + 1.0
+
+
+def test_stochastic_em_learns(setup):
+    net, params, _ = setup
+    key = jax.random.PRNGKey(7)
+    data = jax.random.normal(key, (512, 10)) * 0.7 - 0.5
+    cfg = EMConfig(step_size=0.4)
+    p = params
+    step = jax.jit(lambda p, b: stochastic_em_update(net, p, b, cfg))
+    lls = []
+    for i in range(30):
+        batch = data[(i * 64) % 512: (i * 64) % 512 + 64]
+        p, ll = step(p, batch)
+        lls.append(float(ll))
+    assert np.mean(lls[-5:]) > np.mean(lls[:5]) + 1.0
+
+
+def test_minibatch_statistics_accumulate_to_full_batch(setup):
+    """E-step stats are sums over data: two half-batches == one full batch.
+    (This additivity is what makes the distributed psum-EM exact.)"""
+    net, params, x = setup
+    full = em_statistics(net, params, x)
+    acc = zeros_like_statistics(net, params)
+    acc = accumulate_statistics(acc, em_statistics(net, params, x[:32]))
+    acc = accumulate_statistics(acc, em_statistics(net, params, x[32:]))
+    for a, b in zip(
+        jax.tree_util.tree_leaves(full), jax.tree_util.tree_leaves(acc)
+    ):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-3,
+                                   atol=1e-4)
+
+
+def test_m_step_respects_constraints(setup):
+    net, params, x = setup
+    stats = em_statistics(net, params, x)
+    new = m_step(net, stats, EMConfig(), [])
+    for w in new["einsum"]:
+        np.testing.assert_allclose(
+            np.asarray(jnp.sum(w, axis=(-2, -1))), 1.0, rtol=1e-5
+        )
+        assert (np.asarray(w) > 0).all()
+    mu = np.asarray(new["phi"][..., 0])
+    second = np.asarray(new["phi"][..., 1])
+    assert ((second - mu**2) > 0).all(), "variances must stay positive"
+
+
+def test_em_recovers_bernoulli_mixture():
+    """EiNet EM on data from a 2-cluster Bernoulli source should beat the
+    independent-Bernoulli baseline in held-out LL."""
+    rng = np.random.RandomState(0)
+    z = rng.randint(2, size=600)
+    protos = np.array([[0.9] * 4 + [0.1] * 4, [0.1] * 4 + [0.9] * 4])
+    data = (rng.rand(600, 8) < protos[z]).astype(np.float32)
+    train, test = jnp.asarray(data[:500]), jnp.asarray(data[500:])
+    g = random_binary_trees(8, 1, 2, seed=5)
+    net = EiNet(g, num_sums=4, exponential_family=Bernoulli())
+    p = net.init(jax.random.PRNGKey(5))
+    for _ in range(15):
+        p, _ = em_update(net, p, train)
+    ll = float(jnp.mean(net.log_likelihood(p, test)))
+    # independent Bernoulli baseline
+    q = np.clip(data[:500].mean(0), 1e-3, 1 - 1e-3)
+    base = float(
+        np.mean(
+            (data[500:] * np.log(q) + (1 - data[500:]) * np.log(1 - q)).sum(1)
+        )
+    )
+    assert ll > base + 0.3, f"EiNet {ll} should beat indep baseline {base}"

@@ -1,0 +1,135 @@
+"""Pallas kernel validation: shape/dtype sweeps vs the pure-jnp oracles."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.log_einsum_exp import log_einsum_exp_pallas
+from repro.kernels.ref import log_einsum_exp_ref, mha_ref
+
+
+def _random_lee(key, b, l, k, ko, scale=30.0):
+    k1, k2, k3 = jax.random.split(key, 3)
+    w = jax.nn.softmax(
+        jax.random.normal(k1, (l, ko, k, k)).reshape(l, ko, -1), -1
+    ).reshape(l, ko, k, k)
+    lnl = -jnp.abs(jax.random.normal(k2, (b, l, k))) * scale
+    lnr = -jnp.abs(jax.random.normal(k3, (b, l, k))) * scale
+    return w, lnl, lnr
+
+
+@pytest.mark.parametrize(
+    "b,l,k,ko",
+    [(1, 1, 1, 1), (4, 3, 5, 5), (7, 2, 8, 1), (130, 4, 16, 16),
+     (16, 1, 40, 40), (33, 7, 13, 9)],
+)
+def test_log_einsum_exp_shapes(b, l, k, ko):
+    w, lnl, lnr = _random_lee(jax.random.PRNGKey(b * 100 + l), b, l, k, ko)
+    out = log_einsum_exp_pallas(w, lnl, lnr, interpret=True)
+    ref = log_einsum_exp_ref(w, lnl, lnr)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-4)
+
+
+def test_log_einsum_exp_extreme_underflow():
+    """Values around -1000 in the log-domain: naive exp would underflow to 0,
+    the log-einsum-exp trick must stay exact (paper Eq. 4)."""
+    w, lnl, lnr = _random_lee(jax.random.PRNGKey(0), 8, 2, 6, 6, scale=1000.0)
+    out = np.asarray(log_einsum_exp_pallas(w, lnl, lnr, interpret=True))
+    ref = np.asarray(log_einsum_exp_ref(w, lnl, lnr))
+    assert np.isfinite(out).all()
+    np.testing.assert_allclose(out, ref, atol=1e-3)
+
+
+def test_log_einsum_exp_custom_vjp():
+    w, lnl, lnr = _random_lee(jax.random.PRNGKey(1), 12, 3, 10, 10)
+    gk = jax.grad(lambda *a: ops.log_einsum_exp(*a).sum(), argnums=(0, 1, 2))(
+        w, lnl, lnr
+    )
+    gr = jax.grad(lambda *a: log_einsum_exp_ref(*a).sum(), argnums=(0, 1, 2))(
+        w, lnl, lnr
+    )
+    for a, b in zip(gk, gr):
+        rel = np.abs(np.asarray(a) - np.asarray(b)) / (np.abs(np.asarray(b)) + 1e-2)
+        assert rel.max() < 1e-3
+
+
+@given(
+    b=st.integers(1, 32),
+    l=st.integers(1, 6),
+    k=st.integers(1, 24),
+    ko=st.integers(1, 24),
+    seed=st.integers(0, 1000),
+)
+@settings(max_examples=15, deadline=None)
+def test_log_einsum_exp_property(b, l, k, ko, seed):
+    w, lnl, lnr = _random_lee(jax.random.PRNGKey(seed), b, l, k, ko)
+    out = log_einsum_exp_pallas(w, lnl, lnr, interpret=True)
+    ref = log_einsum_exp_ref(w, lnl, lnr)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-4)
+    # shift invariance: log S(ln + c) == log S(ln) + c
+    c = 7.25
+    out2 = log_einsum_exp_pallas(w, lnl + c, lnr, interpret=True)
+    np.testing.assert_allclose(np.asarray(out2), np.asarray(out) + c, atol=1e-3)
+
+
+@pytest.mark.parametrize(
+    "b,hq,hkv,sq,sk,dh,causal",
+    [
+        (2, 4, 2, 64, 64, 32, True),
+        (1, 8, 8, 100, 100, 16, True),
+        (2, 4, 1, 1, 300, 64, True),
+        (1, 2, 2, 48, 48, 8, False),
+        (3, 6, 3, 130, 130, 32, True),
+    ],
+)
+def test_flash_attention_vs_ref(b, hq, hkv, sq, sk, dh, causal):
+    key = jax.random.PRNGKey(b + sq)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (b, hq, sq, dh))
+    k = jax.random.normal(kk, (b, hkv, sk, dh))
+    v = jax.random.normal(kv, (b, hkv, sk, dh))
+    out = ops.flash_attention(q, k, v, causal=causal, block_q=32, block_k=32)
+    ref = mha_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5)
+
+
+@given(
+    sq=st.integers(1, 96),
+    sk=st.integers(8, 160),
+    dh=st.sampled_from([8, 16, 32]),
+    seed=st.integers(0, 100),
+)
+@settings(max_examples=10, deadline=None)
+def test_flash_attention_property(sq, sk, dh, seed):
+    if sq > sk:
+        sq = sk
+    key = jax.random.PRNGKey(seed)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (1, 2, sq, dh))
+    k = jax.random.normal(kk, (1, 2, sk, dh))
+    v = jax.random.normal(kv, (1, 2, sk, dh))
+    out = flash_attention_pallas(
+        q.reshape(2, sq, dh), k.reshape(2, sk, dh), v.reshape(2, sk, dh),
+        causal=True, block_q=32, block_k=32, interpret=True,
+    ).reshape(1, 2, sq, dh)
+    ref = mha_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=5e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_dtypes(dtype):
+    key = jax.random.PRNGKey(3)
+    q = jax.random.normal(key, (1, 2, 64, 32), dtype)
+    k = jax.random.normal(key, (1, 2, 64, 32), dtype)
+    v = jax.random.normal(key, (1, 2, 64, 32), dtype)
+    out = ops.flash_attention(q, k, v)
+    ref = mha_ref(q.astype(jnp.float32), k.astype(jnp.float32),
+                  v.astype(jnp.float32))
+    tol = 3e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref), atol=tol
+    )

@@ -1,0 +1,221 @@
+"""Unit tests for model substrates: attention, MoE, mamba, xLSTM, losses."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.ref import mha_ref
+from repro.models import attention, mamba, moe, xlstm
+from repro.models.common import cross_entropy_loss
+
+
+# ------------------------------------------------------------------ attention
+@pytest.mark.parametrize("qc,kc", [(16, 16), (32, 64), (1000, 1000)])
+def test_chunked_attention_matches_ref(qc, kc):
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (2, 8, 100, 16))
+    k = jax.random.normal(jax.random.PRNGKey(1), (2, 2, 100, 16))
+    v = jax.random.normal(jax.random.PRNGKey(2), (2, 2, 100, 16))
+    out = attention.chunked_attention(q, k, v, q_chunk=qc, kv_chunk=kc)
+    ref = mha_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+
+
+def test_decode_attention_matches_ref():
+    key = jax.random.PRNGKey(3)
+    q = jax.random.normal(key, (2, 8, 1, 16))
+    k = jax.random.normal(jax.random.PRNGKey(4), (2, 2, 64, 16))
+    v = jax.random.normal(jax.random.PRNGKey(5), (2, 2, 64, 16))
+    # cache valid up to 40 entries
+    out = attention.decode_attention(q, k, v, kv_len=jnp.asarray(40))
+    ref = mha_ref(q, k[:, :, :40], v[:, :, :40], causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+
+
+# ------------------------------------------------------------------------ moe
+def _moe_weights(key, e, d, f):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return (
+        jax.random.normal(k1, (d, e)) * 0.1,
+        jax.random.normal(k2, (e, d, f)) * 0.1,
+        jax.random.normal(k3, (e, d, f)) * 0.1,
+        jax.random.normal(k4, (e, f, d)) * 0.1,
+    )
+
+
+def test_moe_gather_matches_dense():
+    """Sort-based dispatch == GShard one-hot dispatch (same drops by rank)."""
+    e, d, f, t, k = 4, 8, 16, 64, 2
+    router, wg, wu, wd = _moe_weights(jax.random.PRNGKey(0), e, d, f)
+    x = jax.random.normal(jax.random.PRNGKey(1), (t, d))
+    # generous capacity -> no token dropping -> exactly equal
+    out_g, aux_g = moe.moe_ffn_gather(x, router, wg, wu, wd, k, 8.0)
+    out_d, aux_d = moe.moe_ffn_dense(x, router, wg, wu, wd, k, 8.0)
+    np.testing.assert_allclose(np.asarray(out_g), np.asarray(out_d), atol=1e-5)
+    np.testing.assert_allclose(float(aux_g), float(aux_d), rtol=1e-5)
+
+
+def test_moe_capacity_drops_tokens():
+    e, d, f, t, k = 2, 4, 8, 32, 1
+    router, wg, wu, wd = _moe_weights(jax.random.PRNGKey(2), e, d, f)
+    x = jax.random.normal(jax.random.PRNGKey(3), (t, d))
+    out_full, _ = moe.moe_ffn_gather(x, router, wg, wu, wd, k, 8.0)
+    out_tight, _ = moe.moe_ffn_gather(x, router, wg, wu, wd, k, 0.25)
+    # with tight capacity some token outputs must be zero (dropped)
+    dropped = np.where(np.abs(np.asarray(out_tight)).sum(-1) == 0)[0]
+    assert len(dropped) > 0
+    kept = np.where(np.abs(np.asarray(out_tight)).sum(-1) > 0)[0]
+    np.testing.assert_allclose(
+        np.asarray(out_tight)[kept], np.asarray(out_full)[kept], atol=1e-5
+    )
+
+
+def test_moe_grad_flows():
+    e, d, f, t, k = 4, 8, 16, 32, 2
+    router, wg, wu, wd = _moe_weights(jax.random.PRNGKey(4), e, d, f)
+    x = jax.random.normal(jax.random.PRNGKey(5), (t, d))
+
+    def loss(wg_):
+        out, aux = moe.moe_ffn_gather(x, router, wg_, wu, wd, k, 2.0)
+        return jnp.sum(out**2) + aux
+
+    g = jax.grad(loss)(wg)
+    assert np.isfinite(np.asarray(g)).all()
+    assert np.abs(np.asarray(g)).sum() > 0
+
+
+# ---------------------------------------------------------------------- mamba
+def _naive_selective_scan(x, dt, a_log, b, c, d_skip):
+    bsz, l, e = x.shape
+    n = a_log.shape[1]
+    a = -np.exp(np.asarray(a_log))
+    h = np.zeros((bsz, e, n))
+    ys = []
+    for t in range(l):
+        a_bar = np.exp(np.asarray(dt[:, t])[..., None] * a)
+        bx = (np.asarray(dt[:, t] * x[:, t]))[..., None] * np.asarray(b[:, t])[:, None, :]
+        h = a_bar * h + bx
+        ys.append((h * np.asarray(c[:, t])[:, None, :]).sum(-1))
+    y = np.stack(ys, 1) + np.asarray(d_skip) * np.asarray(x)
+    return y
+
+
+@pytest.mark.parametrize("chunk", [4, 16, 64])
+def test_selective_scan_matches_naive(chunk):
+    bsz, l, e, n = 2, 24, 6, 4
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (bsz, l, e))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (bsz, l, e)))
+    a_log = jax.random.normal(ks[2], (e, n)) * 0.3
+    b = jax.random.normal(ks[3], (bsz, l, n))
+    c = jax.random.normal(ks[4], (bsz, l, n))
+    d_skip = jnp.ones((e,))
+    y, h = mamba.selective_scan(x, dt, a_log, b, c, d_skip, chunk=chunk)
+    ref = _naive_selective_scan(x, dt, a_log, b, c, d_skip)
+    np.testing.assert_allclose(np.asarray(y), ref, rtol=2e-4, atol=2e-4)
+
+
+def test_selective_step_matches_scan():
+    bsz, l, e, n = 2, 8, 4, 3
+    ks = jax.random.split(jax.random.PRNGKey(1), 5)
+    x = jax.random.normal(ks[0], (bsz, l, e))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (bsz, l, e)))
+    a_log = jax.random.normal(ks[2], (e, n)) * 0.3
+    b = jax.random.normal(ks[3], (bsz, l, n))
+    c = jax.random.normal(ks[4], (bsz, l, n))
+    d_skip = jnp.zeros((e,))
+    y_seq, h_seq = mamba.selective_scan(x, dt, a_log, b, c, d_skip, chunk=4)
+    h = jnp.zeros((bsz, e, n))
+    for t in range(l):
+        y_t, h = mamba.selective_step(
+            x[:, t], dt[:, t], a_log, b[:, t], c[:, t], d_skip, h
+        )
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h_seq), rtol=1e-4,
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(y_t), np.asarray(y_seq[:, -1]),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_causal_conv1d_decode_matches_train():
+    bsz, l, e, kw = 2, 10, 4, 4
+    x = jax.random.normal(jax.random.PRNGKey(2), (bsz, l, e))
+    w = jax.random.normal(jax.random.PRNGKey(3), (kw, e))
+    y_full, _ = mamba.causal_conv1d(x, w)
+    state = jnp.zeros((bsz, kw - 1, e))
+    ys = []
+    for t in range(l):
+        y_t, state = mamba.causal_conv1d(x[:, t : t + 1], w, state)
+        ys.append(y_t)
+    np.testing.assert_allclose(
+        np.asarray(jnp.concatenate(ys, 1)), np.asarray(y_full), atol=1e-5
+    )
+
+
+# ---------------------------------------------------------------------- xlstm
+def test_mlstm_chunks_equal_steps():
+    bsz, l, h, dh = 2, 12, 2, 8
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    q = jax.random.normal(ks[0], (bsz, l, h, dh))
+    k = jax.random.normal(ks[1], (bsz, l, h, dh))
+    v = jax.random.normal(ks[2], (bsz, l, h, dh))
+    li = jax.random.normal(ks[3], (bsz, l, h))
+    lf = jax.nn.log_sigmoid(jax.random.normal(ks[4], (bsz, l, h)) + 2.0)
+    y_seq, carry_seq = xlstm.mlstm_sequence(q, k, v, li, lf, chunk=5)
+    carry = (
+        jnp.zeros((bsz, h, dh, dh)),
+        jnp.zeros((bsz, h, dh)),
+        jnp.full((bsz, h), -1e30),
+    )
+    ys = []
+    for t in range(l):
+        carry, y = xlstm.mlstm_step(
+            carry, {"q": q[:, t], "k": k[:, t], "v": v[:, t],
+                    "li": li[:, t], "lf": lf[:, t]}
+        )
+        ys.append(y)
+    np.testing.assert_allclose(
+        np.asarray(jnp.stack(ys, 1)), np.asarray(y_seq), rtol=1e-5, atol=1e-5
+    )
+    for a, b in zip(carry, carry_seq):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5,
+                                   atol=1e-5)
+
+
+def test_slstm_stability_long_sequence():
+    """Exponential gating with the m-stabilizer must not overflow over 200
+    steps (the xLSTM stabilization claim)."""
+    bsz, l, h, dh = 1, 200, 2, 4
+    ks = jax.random.split(jax.random.PRNGKey(1), 4)
+    wx = {
+        n: jax.random.normal(k, (bsz, l, h, dh)) * 3.0
+        for n, k in zip("ifzo", ks)
+    }
+    r = {n: jnp.eye(dh)[None].repeat(h, 0) * 0.1 for n in "ifzo"}
+    y, carry = xlstm.slstm_sequence(wx, r, chunk=16)
+    assert np.isfinite(np.asarray(y)).all()
+
+
+# ----------------------------------------------------------------------- loss
+def test_cross_entropy_matches_manual():
+    logits = jax.random.normal(jax.random.PRNGKey(0), (2, 5, 11))
+    labels = jax.random.randint(jax.random.PRNGKey(1), (2, 5), 0, 11)
+    loss, denom = cross_entropy_loss(logits, labels)
+    p = jax.nn.log_softmax(logits, -1)
+    manual = -np.take_along_axis(
+        np.asarray(p), np.asarray(labels)[..., None], -1
+    ).mean()
+    np.testing.assert_allclose(float(loss), manual, rtol=1e-5)
+    assert float(denom) == 10.0
+
+
+def test_cross_entropy_ignores_masked():
+    logits = jax.random.normal(jax.random.PRNGKey(0), (1, 4, 7))
+    labels = jnp.asarray([[1, -1, 2, -1]])
+    loss, denom = cross_entropy_loss(logits, labels)
+    assert float(denom) == 2.0
+    assert np.isfinite(float(loss))

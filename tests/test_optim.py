@@ -1,0 +1,109 @@
+"""Optimizer tests: AdamW variants, quantized state, gradient compression."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.optim import adamw, compression
+
+
+def _quadratic_losses(cfg, steps=120):
+    """Minimize ||x - t||^2 with AdamW; return loss trajectory."""
+    target = jnp.asarray([1.5, -2.0, 0.5, 3.0])
+    params = {"w": jnp.zeros(4)}
+    state = adamw.init_state(cfg, params)
+
+    @jax.jit
+    def step(p, s):
+        g = jax.grad(lambda q: jnp.sum((q["w"] - target) ** 2))(p)
+        p2, s2, _ = adamw.apply_updates(cfg, p, g, s)
+        return p2, s2
+
+    losses = []
+    for _ in range(steps):
+        params, state = step(params, state)
+        losses.append(float(jnp.sum((params["w"] - target) ** 2)))
+    return losses
+
+
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16", "int8"])
+def test_adamw_converges(dtype):
+    cfg = adamw.AdamWConfig(learning_rate=0.1, weight_decay=0.0,
+                            warmup_steps=5, decay_steps=1000,
+                            state_dtype=dtype)
+    losses = _quadratic_losses(cfg)
+    assert losses[-1] < 0.05 * losses[0], f"{dtype}: {losses[-1]}"
+
+
+def test_int8_state_tracks_f32():
+    """Blockwise-int8 moments should track the f32 trajectory closely enough
+    for the 1T-parameter memory trick to be safe (DESIGN.md §4)."""
+    base = adamw.AdamWConfig(learning_rate=0.05, weight_decay=0.0,
+                             warmup_steps=1, decay_steps=10_000)
+    l32 = _quadratic_losses(base)
+    l8 = _quadratic_losses(
+        adamw.AdamWConfig(**{**base.__dict__, "state_dtype": "int8"})
+    )
+    assert abs(l8[-1] - l32[-1]) < 0.1
+
+
+def test_lr_schedule_shape():
+    cfg = adamw.AdamWConfig(learning_rate=1.0, warmup_steps=10, decay_steps=100,
+                            min_lr_ratio=0.1)
+    lrs = [float(adamw.lr_schedule(cfg, jnp.asarray(s))) for s in range(120)]
+    assert lrs[0] < 0.2  # warmup starts low
+    assert abs(max(lrs) - 1.0) < 1e-5
+    assert np.argmax(lrs) <= 12
+    assert abs(lrs[-1] - 0.1) < 0.02  # decays to min ratio
+
+
+def test_grad_clip():
+    cfg = adamw.AdamWConfig(learning_rate=1e-3, grad_clip=1.0)
+    params = {"w": jnp.zeros(3)}
+    state = adamw.init_state(cfg, params)
+    huge = {"w": jnp.asarray([1e6, -1e6, 1e6])}
+    p2, _, gnorm = adamw.apply_updates(cfg, params, huge, state)
+    assert float(gnorm) > 1e5
+    # post-clip update magnitude is bounded by ~lr
+    assert np.abs(np.asarray(p2["w"])).max() < 5e-3
+
+
+# ----------------------------------------------------------------- compression
+@given(st.integers(0, 1000), st.integers(10, 5000))
+@settings(max_examples=20, deadline=None)
+def test_int8_roundtrip_error_bound(seed, n):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (n,)) * 10
+    q, s = compression.quantize_int8(x)
+    back = compression.dequantize_int8(q, s, x.shape)
+    # error bounded by half a quantization step per block
+    err = np.abs(np.asarray(x - back))
+    bound = np.repeat(np.asarray(s), compression.BLOCK)[: n] * 0.5 + 1e-6
+    assert (err <= bound + 1e-5).all()
+
+
+def test_error_feedback_removes_bias():
+    """With error feedback, the *running sum* of compressed grads converges
+    to the running sum of true grads (no systematic bias)."""
+    key = jax.random.PRNGKey(0)
+    g_true = jax.random.normal(key, (512,)) * 0.1
+    res = None
+    acc = jnp.zeros((512,))
+    for i in range(50):
+        (q, s), res = compression.compress_with_feedback(g_true, res)
+        acc = acc + compression.dequantize_int8(q, s, g_true.shape)
+    total_err = np.abs(np.asarray(acc - 50 * g_true)).max()
+    # residual carries at most one step's quantization error
+    assert total_err < float(np.abs(np.asarray(g_true)).max()) * 0.02 + 1e-3
+
+
+def test_topk_sparsify():
+    x = jnp.asarray([0.1, -5.0, 0.2, 3.0, -0.05])
+    (vals, idx), res = compression.topk_sparsify(x, 2, None)
+    dense = compression.densify_topk(vals, idx, x.shape)
+    np.testing.assert_allclose(
+        np.asarray(dense), [0, -5.0, 0, 3.0, 0], atol=1e-6
+    )
+    np.testing.assert_allclose(np.asarray(res), [0.1, 0, 0.2, 0, -0.05],
+                               atol=1e-6)

@@ -1,0 +1,78 @@
+"""Region-graph structure tests: smoothness/decomposability invariants."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import region_graph as rg
+
+
+@given(
+    num_vars=st.integers(8, 64),
+    depth=st.integers(1, 4),
+    reps=st.integers(1, 5),
+    seed=st.integers(0, 10_000),
+)
+@settings(max_examples=25, deadline=None)
+def test_rat_structure_valid(num_vars, depth, reps, seed):
+    if 2**depth > num_vars:
+        depth = int(np.log2(num_vars))
+    g = rg.random_binary_trees(num_vars, depth, reps, seed)
+    g.validate()  # asserts decomposability + scope unions
+    assert set(g.regions[g.root]) == set(range(num_vars))
+
+
+def test_rat_leaf_count():
+    g = rg.random_binary_trees(16, 3, 2, 0)
+    for leaf in g.leaf_ids:
+        assert 1 <= len(g.regions[leaf]) <= 4  # 16 / 2^3 = 2 +/- imbalance
+
+
+@pytest.mark.parametrize("axes", [("w",), ("h", "w")])
+def test_pd_structure_valid(axes):
+    g = rg.poon_domingos(8, 8, delta=2, num_channels=1, axes=axes)
+    g.validate()
+
+
+def test_pd_channels_fold_into_leaf_scopes():
+    g = rg.poon_domingos(2, 4, delta=2, num_channels=3, axes=("w",))
+    g.validate()
+    assert g.num_vars == 2 * 4 * 3
+    for leaf in g.leaf_ids:
+        assert len(g.regions[leaf]) % 3 == 0  # channels always travel together
+
+
+def test_topological_layers_order():
+    g = rg.random_binary_trees(32, 3, 4, 1)
+    leaves, pairs = rg.topological_layers(g)
+    seen = set(leaves)
+    for l_p, l_s in pairs:
+        for p in l_p:
+            _, left, right = g.partitions[p]
+            assert left in seen and right in seen, "child computed after parent"
+        seen.update(g.partitions[p][0] for p in l_p)
+        for s in l_s:
+            assert all(p in l_p or ("x", p) for p in g.region_children[s])
+    # final layer is exactly the root
+    assert pairs[-1][1] == [g.root]
+
+
+def test_topological_layers_pd():
+    g = rg.poon_domingos(4, 8, delta=2, num_channels=1, axes=("w", "h"))
+    leaves, pairs = rg.topological_layers(g)
+    assert pairs[-1][1] == [g.root]
+    # every partition appears exactly once
+    all_parts = [p for l_p, _ in pairs for p in l_p]
+    assert sorted(all_parts) == list(range(len(g.partitions)))
+
+
+def test_replica_assignment_disjoint():
+    g = rg.random_binary_trees(32, 3, 5, 2)
+    scopes = [g.regions[i] for i in g.leaf_ids]
+    assign, num = rg.assign_replicas(scopes)
+    for r in range(num):
+        used = set()
+        for i, s in enumerate(scopes):
+            if assign[i] == r:
+                assert not (used & set(s)), "overlapping scopes share a replica"
+                used |= set(s)
