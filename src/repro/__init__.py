@@ -13,4 +13,8 @@ Subpackages:
   launch      production mesh, dry-run, train/serve drivers
 """
 
+from repro import _jax_compat as _jax_compat_lib
+
+_jax_compat_lib.install()  # uniform mesh API across the supported jax range
+
 __version__ = "1.0.0"

@@ -27,6 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import region_graph as rg_lib
+from repro.dist.sharding import constraint as _cst
 from repro.core.exponential_family import ExponentialFamily, Normal
 from repro.core.layers import (
     NEG_INF,
@@ -320,8 +321,6 @@ class EiNet:
         below (zero-gather fast path); the global row buffer is materialized
         only for non-canonical pairs or when the sampling cache is requested.
         """
-        from repro.dist.sharding import constraint as _cst
-
         if leaf_rows is None:
             leaf_rows = self._leaf_rows(e)
         leaf_out = _cst(leaf_rows, ("batch", "einet_nodes", None))

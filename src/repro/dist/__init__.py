@@ -1,0 +1,10 @@
+"""Distribution subsystem: sharding rules, fault tolerance, elasticity.
+
+  sharding         logical-axis rules -> PartitionSpecs (no-op on 1 device)
+  fault_tolerance  checkpoint-restart training loop + straggler mitigation
+  elastic          re-place state on a grown/shrunk mesh
+"""
+
+from repro.dist import elastic, fault_tolerance, sharding
+
+__all__ = ["elastic", "fault_tolerance", "sharding"]

@@ -1,0 +1,44 @@
+"""Elastic resharding: re-place a pytree on a grown or shrunk device mesh.
+
+Elasticity story: the mesh is a *function of the currently alive devices*
+(``repro.launch.mesh.make_mesh_for``), parameter placement is a *function of
+the tree and the rules* (``repro.dist.sharding.tree_shardings``), and the
+data pipeline is stateless.  So surviving a lost (or gained) device is just:
+build a new mesh over the live devices, :func:`reshard` the state onto it,
+continue -- no parameter surgery, no renumbering, values bit-identical.
+
+``reshard`` accepts host (numpy) arrays or jax Arrays from *any* previous
+mesh; cross-mesh moves that the runtime cannot express as a direct transfer
+fall back to a host round-trip (gather -> place), which is exactly the
+DCN-bandwidth path a real elastic-training system takes on a topology
+change.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+
+from repro.dist import sharding as sharding_lib
+
+
+def reshard(tree: Any, mesh) -> Any:
+    """Place ``tree``'s leaves on ``mesh`` under the active sharding rules.
+
+    Values are preserved exactly (this is data movement, not math); layouts
+    come from :func:`repro.dist.sharding.tree_shardings`, so the result is
+    immediately consumable by a jit compiled against that mesh.
+    """
+    shardings = sharding_lib.tree_shardings(mesh, tree)
+
+    def move(x, sh):
+        try:
+            return jax.device_put(x, sh)
+        except Exception:
+            # cross-mesh move the runtime can't express directly (e.g. the
+            # source mesh no longer exists): gather to host, then place.
+            return jax.device_put(np.asarray(jax.device_get(x)), sh)
+
+    return jax.tree_util.tree_map(move, tree, shardings)

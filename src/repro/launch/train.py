@@ -15,6 +15,7 @@ XLA_FLAGS).
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
 import jax
@@ -51,7 +52,9 @@ def main():
     cfg = get_config(args.arch)
     mesh = make_mesh_for(model_parallel=args.model_parallel)
     rules = shlib.default_rules(multi_pod=False, fsdp=False)
-    mgr = CheckpointManager(f"{args.ckpt_dir}/{args.arch}".replace("/", "_"))
+    mgr = CheckpointManager(
+        os.path.join(args.ckpt_dir, args.arch.replace("/", "_"))
+    )
 
     with shlib.use_rules(rules), jax.set_mesh(mesh):
         if isinstance(cfg, EinetConfig):

@@ -1,0 +1,84 @@
+"""Minimal stand-in for the slice of `hypothesis` these tests use.
+
+The container image does not ship hypothesis and nothing may be installed,
+so conftest.py registers this module as ``sys.modules["hypothesis"]`` when
+the real package is missing.  It implements ``given`` / ``settings`` /
+``strategies.integers`` / ``strategies.sampled_from`` as a deterministic
+sampler: boundary values first, then seeded-random draws, ``max_examples``
+honored.  No shrinking, no database -- failures report the drawn arguments
+in the assertion traceback instead.
+"""
+
+from __future__ import annotations
+
+import inspect
+import random
+from types import SimpleNamespace
+
+
+class _Strategy:
+    def __init__(self, boundary, draw):
+        self.boundary = list(boundary)  # always-tested edge cases
+        self.draw = draw  # rng -> value
+
+
+def integers(min_value, max_value):
+    return _Strategy(
+        boundary=[min_value, max_value],
+        draw=lambda rng: rng.randint(min_value, max_value),
+    )
+
+
+def sampled_from(elements):
+    elements = list(elements)
+    return _Strategy(
+        boundary=elements[:1],
+        draw=lambda rng: rng.choice(elements),
+    )
+
+
+def settings(max_examples=10, deadline=None, **_ignored):
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*arg_strategies, **kw_strategies):
+    def deco(fn):
+        def wrapper():
+            # read lazily so @settings works in either decorator order
+            # (above @given it lands on wrapper, below it lands on fn)
+            max_examples = getattr(
+                wrapper, "_fallback_max_examples",
+                getattr(fn, "_fallback_max_examples", 10),
+            )
+            rng = random.Random(fn.__name__)  # deterministic per test
+            strategies = list(arg_strategies) + list(kw_strategies.values())
+            names = list(kw_strategies.keys())
+            n_boundary = max((len(s.boundary) for s in strategies), default=0)
+            for example in range(max_examples):
+                drawn = []
+                for s in strategies:
+                    if example < n_boundary and s.boundary:
+                        drawn.append(s.boundary[example % len(s.boundary)])
+                    else:
+                        drawn.append(s.draw(rng))
+                args = drawn[: len(arg_strategies)]
+                kwargs = dict(zip(names, drawn[len(arg_strategies):]))
+                fn(*args, **kwargs)
+
+        # keep the name/doc for reporting but present a zero-arg signature,
+        # so pytest does not mistake the drawn parameters for fixtures
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        wrapper.__signature__ = inspect.Signature()
+        return wrapper
+
+    return deco
+
+
+strategies = SimpleNamespace(integers=integers, sampled_from=sampled_from)

@@ -1,0 +1,42 @@
+"""Shared pytest configuration.
+
+``@pytest.mark.slow`` marks subprocess tests that re-launch python with
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (the main pytest
+process must keep seeing 1 device).  They take minutes, so the tier-1 loop
+skips them; opt in with ``--runslow`` (CI runs them as a separate job).
+"""
+
+import importlib.util
+import os
+import sys
+
+import pytest
+
+try:  # the container may not ship hypothesis; tests fall back to a
+    import hypothesis  # noqa: F401  deterministic mini-sampler (same API slice)
+except ImportError:
+    _spec = importlib.util.spec_from_file_location(
+        "hypothesis",
+        os.path.join(os.path.dirname(__file__), "_hypothesis_fallback.py"),
+    )
+    _mod = importlib.util.module_from_spec(_spec)
+    _spec.loader.exec_module(_mod)
+    sys.modules["hypothesis"] = _mod
+
+
+def pytest_addoption(parser):
+    parser.addoption(
+        "--runslow",
+        action="store_true",
+        default=False,
+        help="run @pytest.mark.slow multi-device subprocess tests",
+    )
+
+
+def pytest_collection_modifyitems(config, items):
+    if config.getoption("--runslow"):
+        return
+    skip_slow = pytest.mark.skip(reason="slow multi-device test: use --runslow")
+    for item in items:
+        if "slow" in item.keywords:
+            item.add_marker(skip_slow)

@@ -1,0 +1,221 @@
+"""Fast single-device unit tests for repro.dist.
+
+The subprocess tests in test_dist.py cover the 8-device semantics; these
+cover the pure logic (rule resolution, precedence, degradation to no-ops on
+one device) that must hold everywhere, including in jit traces with no mesh
+in scope at all.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.core import EiNet, Normal, random_binary_trees
+from repro.dist import elastic, fault_tolerance as ft, sharding as shlib
+
+
+# ===================================================================== rules
+def test_default_rules_tables():
+    r = shlib.default_rules(multi_pod=False, fsdp=False)
+    assert r["batch"] == ("data",)
+    assert r["expert"] == "model"  # single axis name: all_to_all needs one
+    assert r["fsdp"] is None
+    r = shlib.default_rules(multi_pod=True, fsdp=True)
+    assert r["batch"] == ("pod", "data")
+    assert r["fsdp"] == ("data",)
+
+
+def test_use_rules_nesting_precedence():
+    assert shlib.get_rules() is None
+    outer = shlib.default_rules(False, False)
+    with shlib.use_rules(outer):
+        assert shlib.get_rules()["seq"] == "model"
+        inner = dict(outer, seq=None)
+        with shlib.use_rules(inner):
+            assert shlib.get_rules()["seq"] is None  # innermost wins
+        assert shlib.get_rules()["seq"] == "model"  # outer restored
+    assert shlib.get_rules() is None
+
+
+def test_use_rules_copies_table():
+    rules = shlib.default_rules(False, False)
+    with shlib.use_rules(rules):
+        rules["batch"] = None  # caller mutation after install is invisible
+        assert shlib.get_rules()["batch"] == ("data",)
+
+
+# ================================================================ resolution
+def test_resolve_spec_divisibility_fallback():
+    rules = shlib.default_rules(False, False)
+    sizes = {"data": 2, "model": 4}
+    # 7 % 4 != 0: the dim degrades to replicated instead of erroring
+    assert shlib.resolve_spec(("heads",), (7,), sizes, rules) is None
+    assert shlib.resolve_spec(("heads",), (8,), sizes, rules) == P("model")
+
+
+def test_resolve_spec_no_double_use_of_axis():
+    rules = shlib.default_rules(False, False)
+    sizes = {"data": 2, "model": 4}
+    # "seq" and "heads" both map to "model": only the first dim gets it
+    spec = shlib.resolve_spec(("seq", "heads"), (8, 8), sizes, rules)
+    assert spec == P("model")
+
+
+def test_resolve_spec_missing_axis_and_zero_dim():
+    rules = shlib.default_rules(multi_pod=True, fsdp=False)
+    sizes = {"data": 2, "model": 4}  # no "pod" axis in this mesh
+    assert shlib.resolve_spec(("batch",), (8,), sizes, rules) is None
+    assert shlib.resolve_spec(("heads",), (0,), sizes, rules) is None
+
+
+def test_path_str():
+    tree = {"blocks": ({"mlp": {"wu": 1}},), "head": 2}
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    paths = sorted(shlib._path_str(p) for p, _ in flat)
+    assert paths == ["/blocks/0/mlp/wu", "/head"]
+
+
+# ================================================================ constraint
+def test_constraint_noop_without_rules():
+    x = jnp.ones((4, 4))
+    assert shlib.constraint(x, ("batch", "mlp")) is x
+
+
+def test_constraint_noop_without_mesh():
+    x = jnp.ones((4, 4))
+    with shlib.use_rules(shlib.default_rules(False, False)):
+        assert shlib.constraint(x, ("batch", "mlp")) is x
+
+
+def test_constraint_noop_on_one_device_mesh():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    x = jnp.ones((4, 4))
+    with shlib.use_rules(shlib.default_rules(False, False)), jax.set_mesh(mesh):
+        y = jax.jit(lambda a: shlib.constraint(a * 2, ("batch", "mlp")))(x)
+    np.testing.assert_allclose(np.asarray(y), 2 * np.ones((4, 4)))
+
+
+def test_constrain_like_params_identity_without_rules():
+    tree = {"mlp": {"wu": jnp.ones((2, 3, 4))}}
+    out = shlib.constrain_like_params(tree)
+    assert out["mlp"]["wu"] is tree["mlp"]["wu"]
+
+
+# ============================================================ tree placement
+def test_tree_shardings_covers_lm_and_einet_paths():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    tree = {
+        "blocks": ({"mlp": {"wu": jnp.ones((2, 8, 32))}},),
+        "head": jnp.ones((8, 128)),
+        "phi": jnp.ones((12, 4, 2, 2)),
+        "einsum": [jnp.ones((4, 4, 4, 4))],
+        "mixing": [jnp.zeros((0, 0, 4))],
+        "class_prior": jnp.ones((1,)),
+    }
+    with shlib.use_rules(shlib.default_rules(False, False)):
+        sh = shlib.tree_shardings(mesh, tree)
+    leaves = jax.tree_util.tree_leaves(sh)
+    assert len(leaves) == len(jax.tree_util.tree_leaves(tree))
+    assert all(l.mesh is mesh for l in leaves)
+
+
+def test_batch_shardings_leading_dim():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    batch = {"x": jnp.ones((8, 16)), "scalar": jnp.ones(())}
+    with shlib.use_rules(shlib.default_rules(False, False)):
+        sh = shlib.batch_shardings(mesh, batch)
+    assert sh["x"].mesh is mesh and sh["scalar"].mesh is mesh
+
+
+def test_reshard_one_device_mesh_roundtrip():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    tree = {
+        "blocks": ({"mlp": {
+            "wu": np.random.RandomState(0).randn(2, 8, 32).astype(np.float32)
+        }},),
+        "head": np.random.RandomState(1).randn(8, 128).astype(np.float32),
+    }
+    with shlib.use_rules(shlib.default_rules(False, False)):
+        placed = elastic.reshard(tree, mesh)
+        moved = elastic.reshard(
+            jax.tree_util.tree_map(np.asarray, placed), mesh
+        )
+    for a, b in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(moved)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ========================================================= straggler monitor
+def _full_window(mon, pattern, rounds=None):
+    rounds = rounds or mon.cfg.straggler_window
+    for _ in range(rounds):
+        for shard, t in enumerate(pattern):
+            mon.record(shard, t)
+
+
+def test_straggler_no_spares_gives_empty_remap():
+    cfg = ft.LoopConfig(straggler_factor=2.0, straggler_window=4)
+    mon = ft.StragglerMonitor(num_shards=3, cfg=cfg)
+    _full_window(mon, [1.0, 1.0, 10.0])
+    assert mon.stragglers() == [2]
+    assert mon.mitigate() == {}  # no spares: detection without a plan
+
+
+def test_straggler_all_slow_flags_nobody():
+    cfg = ft.LoopConfig(straggler_factor=2.0, straggler_window=4)
+    mon = ft.StragglerMonitor(num_shards=4, cfg=cfg, spares=[9])
+    _full_window(mon, [10.0, 10.0, 10.0, 10.0])  # uniform slowdown
+    assert mon.stragglers() == []
+    assert mon.mitigate() == {}
+
+
+def test_straggler_needs_full_window():
+    cfg = ft.LoopConfig(straggler_factor=2.0, straggler_window=8)
+    mon = ft.StragglerMonitor(num_shards=2, cfg=cfg)
+    _full_window(mon, [1.0, 10.0], rounds=3)  # window not filled yet
+    assert mon.stragglers() == []
+
+
+def test_straggler_fewer_spares_than_stragglers():
+    cfg = ft.LoopConfig(straggler_factor=2.0, straggler_window=2)
+    mon = ft.StragglerMonitor(num_shards=5, cfg=cfg, spares=[50])
+    _full_window(mon, [1.0, 1.0, 1.0, 30.0, 40.0])
+    assert mon.stragglers() == [3, 4]
+    assert mon.mitigate() == {3: 50}  # one spare: first straggler served
+    assert mon.spares == []
+
+
+def test_straggler_two_shard_fleet():
+    """Leave-one-out baseline: a 10x-slow node in a 2-shard fleet must be
+    flagged (a self-inclusive median could never exceed its own threshold)."""
+    cfg = ft.LoopConfig(straggler_factor=2.0, straggler_window=4)
+    mon = ft.StragglerMonitor(num_shards=2, cfg=cfg, spares=[7])
+    _full_window(mon, [1.0, 10.0])
+    assert mon.stragglers() == [1]
+    assert mon.mitigate() == {1: 7}
+
+
+def test_straggler_single_shard_never_flags():
+    mon = ft.StragglerMonitor(
+        num_shards=1, cfg=ft.LoopConfig(straggler_window=2))
+    _full_window(mon, [100.0])
+    assert mon.stragglers() == []
+
+
+# ============================================== EiNet without rules (satellite)
+def test_einet_forward_and_sample_with_rules_unset():
+    """Regression: EiNet must run with repro.dist rules unset (the module-
+    level constraint import must not require a mesh or rules)."""
+    assert shlib.get_rules() is None
+    g = random_binary_trees(8, 2, 2, seed=0)
+    net = EiNet(g, num_sums=3, exponential_family=Normal())
+    params = net.init(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (5, 8))
+    ll = net.log_likelihood(params, x)
+    assert ll.shape == (5,)
+    assert bool(jnp.all(jnp.isfinite(ll)))
+    s = net.sample(params, jax.random.PRNGKey(2), 4)
+    assert s.shape == (4, 8)
+    assert bool(jnp.all(jnp.isfinite(s)))
