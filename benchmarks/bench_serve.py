@@ -1,0 +1,83 @@
+"""Serving-engine throughput benchmark -> BENCH_serve.json.
+
+Measures the batched exact-inference engine (``repro.serve``) against the
+direct one-call-at-a-time path on a mixed query stream and writes a JSON
+record so the perf trajectory has data across PRs:
+
+  PYTHONPATH=src python benchmarks/bench_serve.py --smoke     # CI-sized
+  PYTHONPATH=src python benchmarks/bench_serve.py             # einet_rat
+
+Schema (one flat dict): see ``repro.serve.benchmark.run_benchmark`` plus
+{"arch", "num_vars", "num_sums", "timestamp"}.
+"""
+
+from __future__ import annotations
+
+import argparse
+import datetime
+import json
+
+import jax
+
+from repro.configs import EinetConfig, get_config
+from repro.launch.cells import build_einet
+from repro.serve import format_report, mixed_requests, run_benchmark
+
+SMOKE_CONFIG = EinetConfig(
+    name="einet-rat-serve-smoke",
+    structure="rat",
+    num_vars=16,
+    depth=2,
+    num_repetitions=2,
+    num_sums=4,
+    batch_size=64,
+)
+
+
+def main(
+    smoke: bool = False,
+    arch: str = "einet_rat",
+    requests: int = 64,
+    max_batch: int = 0,
+    reps: int = 3,
+    out: str = "BENCH_serve.json",
+) -> dict:
+    cfg = SMOKE_CONFIG if smoke else get_config(arch)
+    if smoke:
+        requests = min(requests, 24)
+    model = build_einet(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    reqs = mixed_requests(model.num_vars, requests, seed=0)
+    report = run_benchmark(model, params, reqs, max_batch=max_batch, reps=reps)
+    ok = report["parity_max_abs_diff"] <= 1e-5
+    report.update(
+        arch=cfg.name,
+        num_vars=model.num_vars,
+        num_sums=model.K,
+        smoke=smoke,
+        parity_ok=ok,
+        timestamp=datetime.datetime.now(datetime.timezone.utc).isoformat(),
+    )
+    print(format_report(report))
+    if not ok:
+        print(f"PARITY FAILURE: {report['parity_max_abs_diff']:.2e} > 1e-5")
+    if out:
+        with open(out, "w") as f:
+            json.dump(report, f, indent=2, sort_keys=True)
+        print(f"wrote {out}")
+    return report if ok else {}
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny model + short stream (CI profile)")
+    ap.add_argument("--arch", default="einet_rat")
+    ap.add_argument("--requests", type=int, default=64)
+    ap.add_argument("--max-batch", type=int, default=0)
+    ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--out", default="BENCH_serve.json")
+    args = ap.parse_args()
+    result = main(smoke=args.smoke, arch=args.arch, requests=args.requests,
+                  max_batch=args.max_batch, reps=args.reps, out=args.out)
+    raise SystemExit(0 if result else 1)

@@ -1,7 +1,7 @@
 """Paper core: Einsum Networks (Peharz et al., ICML 2020) in JAX."""
 
 from repro.core.baseline import NaiveEiNet
-from repro.core.einet import EiNet
+from repro.core.einet import QUERY_KINDS, EiNet
 from repro.core.em import (
     EMConfig,
     accumulate_statistics,
@@ -28,6 +28,7 @@ from repro.core.region_graph import (
 
 __all__ = [
     "EiNet",
+    "QUERY_KINDS",
     "NaiveEiNet",
     "EMConfig",
     "em_statistics",

@@ -38,6 +38,17 @@ from repro.core.layers import (
 )
 
 
+# query kinds understood by EiNet.query / the serving engine
+QUERY_KINDS = (
+    "joint_ll",
+    "marginal_ll",
+    "conditional_ll",
+    "sample",
+    "conditional_sample",
+    "mpe",
+)
+
+
 @dataclasses.dataclass
 class PairSpec:
     """Static gather tables for one (product-layer, sum-layer) pair."""
@@ -517,6 +528,68 @@ class EiNet:
         out = jnp.zeros((b, self.num_vars + 1))
         out = out.at[rows_b, cols].set(draws)[:, : self.num_vars]
         return jnp.where(evidence_mask, x, out)
+
+    def conditional_sample_per_key(
+        self,
+        params: Dict[str, Any],
+        keys: jax.Array,
+        x: jax.Array,
+        evidence_mask: jax.Array,
+        mode: str = "sample",
+    ) -> jax.Array:
+        """Row-independent conditional sampling: one PRNG key per batch row.
+
+        vmap over the batch makes every row's draw a pure function of its own
+        (key, x, evidence) triple -- results are invariant to how requests
+        are coalesced into micro-batches, which is what lets the serving
+        engine pad buckets with filler rows without perturbing real rows.
+        """
+
+        def one(k, xi, ei):
+            return self.conditional_sample(
+                params, k, xi[None], ei[None], mode=mode
+            )[0]
+
+        return jax.vmap(one)(keys, x, evidence_mask)
+
+    # ----------------------------------------------------------------- query
+    def query(self, params: Dict[str, Any], batch: Dict[str, Any],
+              kind: str) -> jax.Array:
+        """Uniform exact-inference entry point (the serving-engine surface).
+
+        ``batch`` carries "x" (B, D) float32, "evidence_mask" / "query_mask"
+        (B, D) bool, and "keys" (B, 2) uint32 per-row PRNG keys; each kind
+        ignores the fields it does not need, so one input signature covers
+        every program in the serving cache.
+
+        Kinds: "joint_ll" -> (B,) log p(x); "marginal_ll" -> (B,) log p(x_e);
+        "conditional_ll" -> (B,) log p(x_q | x_e); "sample" -> (B, D)
+        unconditional draws; "conditional_sample" -> (B, D) draws of the
+        evidence complement; "mpe" -> (B, D) greedy argmax decode.
+        """
+        x = batch["x"]
+        if kind == "joint_ll":
+            return self.log_likelihood(params, x)
+        if kind == "marginal_ll":
+            return self.log_likelihood(params, x, batch["evidence_mask"])
+        if kind == "conditional_ll":
+            return self.conditional_log_likelihood(
+                params, x, batch["query_mask"], batch["evidence_mask"]
+            )
+        if kind == "sample":
+            return self.conditional_sample_per_key(
+                params, batch["keys"], jnp.zeros_like(x),
+                jnp.zeros_like(batch["evidence_mask"]),
+            )
+        if kind == "conditional_sample":
+            return self.conditional_sample_per_key(
+                params, batch["keys"], x, batch["evidence_mask"]
+            )
+        if kind == "mpe":
+            return self.conditional_sample_per_key(
+                params, batch["keys"], x, batch["evidence_mask"], mode="argmax"
+            )
+        raise ValueError(f"unknown query kind {kind!r}; one of {QUERY_KINDS}")
 
     # ------------------------------------------------------------- projection
     def project_params(self, params: Dict[str, Any]) -> Dict[str, Any]:

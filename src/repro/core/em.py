@@ -24,7 +24,7 @@ to gradient all-reduce (see ``repro.dist``).  ``em_update`` takes an optional
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional, Sequence
+from typing import Any, Dict, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -129,7 +129,6 @@ def m_step(
     model: EiNet,
     stats: Dict[str, Any],
     cfg: EMConfig,
-    mix_masks: List[jax.Array],
 ) -> Dict[str, Any]:
     """Exact M-step from accumulated statistics."""
     alpha = cfg.laplace_alpha
@@ -171,7 +170,7 @@ def em_update(
     """One full EM update on a batch (monotone on that batch). Returns
     (new_params, mean_ll)."""
     stats = em_statistics(model, params, x, axis_names)
-    new = m_step(model, stats, cfg, [])
+    new = m_step(model, stats, cfg)
     return new, stats["ll"] / stats["count"]
 
 

@@ -71,6 +71,14 @@ def default_rules(multi_pod: bool, fsdp: bool) -> Rules:
     }
 
 
+def serve_rules(multi_pod: bool = False) -> Rules:
+    """Rule table for the batched inference engine (``repro.serve``): data
+    parallelism over the micro-batch, layer-node sharding over "model", no
+    FSDP (serving keeps parameters resident).  Degrades to a no-op on a
+    single device like every other table."""
+    return default_rules(multi_pod, fsdp=False)
+
+
 @contextlib.contextmanager
 def use_rules(rules: Rules):
     """Install ``rules`` for the dynamic extent of the block (re-entrant:

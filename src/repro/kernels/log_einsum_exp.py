@@ -14,8 +14,11 @@ TPU adaptation of the paper's GPU einsum dispatch (DESIGN.md §2):
     tile.
   * Grid = (L, B / B_t): layer-nodes are embarrassingly parallel; the batch is
     tiled so the working set  B_t*K^2 + K^2*K_out  floats stays within VMEM.
-    For MXU efficiency K^2 and K_out should be padded to lane multiples of
-    128; the wrapper in ``ops.py`` handles padding/unpadding.
+    For MXU efficiency K^2 and K_out must be padded to lane multiples of
+    128; ``_pad_for_lanes`` in ``ops.py`` handles padding/unpadding (K is
+    rounded up to a multiple of 16 so K^2 lands on a 128 multiple, K_out to a
+    full 128 lane; padded ln entries are -inf = log 0, padded weights 0, so
+    the contraction is exact).
 
 Validated against ``ref.log_einsum_exp_ref`` in interpret mode (CPU) across
 shape/dtype sweeps -- see ``tests/test_kernels.py``.
@@ -29,14 +32,16 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.layers import NEG_INF
+
 
 def _kernel(w_ref, l_ref, r_ref, o_ref):
     ln_l = l_ref[:, 0, :]  # (B_t, K)
     ln_r = r_ref[:, 0, :]  # (B_t, K)
     a = jnp.max(ln_l, axis=-1, keepdims=True)
     ap = jnp.max(ln_r, axis=-1, keepdims=True)
-    a = jnp.maximum(a, -1e30)
-    ap = jnp.maximum(ap, -1e30)
+    a = jnp.maximum(a, NEG_INF)
+    ap = jnp.maximum(ap, NEG_INF)
     el = jnp.exp(ln_l - a)  # (B_t, K), VPU
     er = jnp.exp(ln_r - ap)
     bt, k = el.shape

@@ -28,11 +28,34 @@ def _on_tpu() -> bool:
 # --------------------------------------------------------------------------
 # log-einsum-exp: fused forward + einsum backward (custom VJP)
 # --------------------------------------------------------------------------
+def _pad_for_lanes(w, ln_left, ln_right):
+    """Pad the contraction dims to MXU lane multiples of 128.
+
+    K is rounded up to a multiple of 16 (so the flattened K^2 product axis is
+    a multiple of 256 >= one 128 lane), K_out to a full 128 lane.  Padded
+    ``ln`` entries are -inf (= log 0, exp'd to exactly 0 inside the kernel)
+    and padded weights are 0, so the padded contraction is bit-exact; the
+    caller slices the K_out padding off the output.
+    """
+    _, k_out, k, _ = w.shape
+    k_p = -(-k // 16) * 16
+    ko_p = -(-k_out // 128) * 128
+    if (k_p, ko_p) == (k, k_out):
+        return w, ln_left, ln_right
+    w = jnp.pad(w, ((0, 0), (0, ko_p - k_out), (0, k_p - k), (0, k_p - k)))
+    lane = ((0, 0), (0, 0), (0, k_p - k))
+    ln_left = jnp.pad(ln_left, lane, constant_values=-jnp.inf)
+    ln_right = jnp.pad(ln_right, lane, constant_values=-jnp.inf)
+    return w, ln_left, ln_right
+
+
 @jax.custom_vjp
 def log_einsum_exp(w: jax.Array, ln_left: jax.Array,
                    ln_right: jax.Array) -> jax.Array:
-    return log_einsum_exp_pallas(w, ln_left, ln_right,
-                                 interpret=not _on_tpu())
+    k_out = w.shape[1]
+    wp, lp, rp = _pad_for_lanes(w, ln_left, ln_right)
+    out = log_einsum_exp_pallas(wp, lp, rp, interpret=not _on_tpu())
+    return out[..., :k_out]
 
 
 def _lee_fwd(w, ln_left, ln_right):

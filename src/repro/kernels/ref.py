@@ -12,7 +12,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-NEG_INF = -1e30
+from repro.core.layers import NEG_INF
 
 
 def log_einsum_exp_ref(w: jax.Array, ln_left: jax.Array,

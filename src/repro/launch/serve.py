@@ -4,8 +4,14 @@ continuous-batching-style slot management.
   PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b --smoke \
       --requests 6 --max-new 12
 
-The EiNet "serving" analogue is batched exact-inference queries
-(log-likelihood / conditionals); ``--arch einet_rat`` demonstrates that path.
+The EiNet path (``--arch einet_rat``) drives the batched exact-inference
+engine (``repro.serve``): a mixed stream of joint/marginal/conditional LL,
+sampling and MPE requests is coalesced into padded per-kind micro-batches
+and executed through the compiled-program cache; warm-up (compilation) and
+steady-state throughput are reported separately, against the direct
+one-call-at-a-time baseline.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch einet_rat --requests 64
 """
 
 from __future__ import annotations
@@ -17,6 +23,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import serve as serve_lib
 from repro.configs import EinetConfig, get_config, smoke_variant
 from repro.launch import cells as dr
 from repro.models import lm
@@ -69,21 +76,16 @@ def serve_lm(cfg, args):
 def serve_einet(cfg, args):
     model = dr.build_einet(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    d = model.num_vars
-    rng = np.random.RandomState(0)
-    x = jnp.asarray(rng.randn(args.requests, d), jnp.float32)
-    ll = jax.jit(model.log_likelihood)
-    ev = jnp.zeros((args.requests, d), bool).at[:, : d // 2].set(True)
-    t0 = time.time()
-    full = ll(params, x)
-    marg = ll(params, x, ev)
-    cond = model.conditional_sample(params, jax.random.PRNGKey(1), x, ev)
-    jax.block_until_ready(cond)
-    print(f"{args.requests} exact-inference queries "
-          f"(joint LL, marginal LL, conditional sample) in "
-          f"{(time.time()-t0)*1e3:.0f} ms")
-    print("log p(x)      :", np.round(np.asarray(full)[:4], 2))
-    print("log p(x_obs)  :", np.round(np.asarray(marg)[:4], 2))
+    n = args.requests
+    reqs = serve_lib.mixed_requests(model.num_vars, n, seed=0)
+    report = serve_lib.run_benchmark(
+        model, params, reqs, max_batch=args.max_batch, reps=args.reps
+    )
+    print(serve_lib.format_report(report))
+    if report["parity_max_abs_diff"] > 1e-5:
+        raise SystemExit(
+            f"engine/direct parity violated: {report['parity_max_abs_diff']:.2e}"
+        )
 
 
 def main():
@@ -92,6 +94,10 @@ def main():
     ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--max-batch", type=int, default=0,
+                    help="einet: engine micro-batch cap (0 = min(32, requests))")
+    ap.add_argument("--reps", type=int, default=3,
+                    help="einet: steady-state measurement repetitions")
     ap.add_argument("--smoke", action="store_true")
     args = ap.parse_args()
     cfg = get_config(args.arch)

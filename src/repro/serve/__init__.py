@@ -1,0 +1,37 @@
+"""Batched exact-inference serving for Einsum Networks.
+
+``ServeEngine`` coalesces heterogeneous exact-inference requests (likelihoods,
+marginals, conditionals, sampling, MPE) into padded per-kind micro-batches and
+executes them through a bounded compiled-program cache -- the systems layer
+that makes the paper's "fast exact inference" claim hold under mixed traffic.
+"""
+
+from repro.serve.engine import (
+    Request,
+    Result,
+    ServeEngine,
+    request_key,
+)
+from repro.serve.benchmark import format_report, run_benchmark
+from repro.serve.queue import RequestQueue, SlotManager
+from repro.serve.workload import (
+    DEFAULT_MIX,
+    direct_call,
+    legacy_call,
+    mixed_requests,
+)
+
+__all__ = [
+    "Request",
+    "Result",
+    "ServeEngine",
+    "RequestQueue",
+    "SlotManager",
+    "request_key",
+    "DEFAULT_MIX",
+    "direct_call",
+    "legacy_call",
+    "mixed_requests",
+    "run_benchmark",
+    "format_report",
+]

@@ -1,0 +1,90 @@
+"""Request queue + slot manager for the exact-inference serving engine.
+
+Mirrors the LM path's continuous-batching design (``launch.serve.serve_lm``:
+one shared cache, slot = row).  Requests enter a FIFO; each scheduling step
+the engine leases up to ``capacity`` slots, builds one micro-batch, and
+releases the slots when the micro-batch retires.  The EiNet has no
+persistent per-request state (no KV cache), so a slot is an admission token
+rather than a cache row -- it bounds the number of in-flight rows per step,
+which keeps every padded micro-batch inside the compiled bucket range.
+"""
+
+from __future__ import annotations
+
+import collections
+from typing import Deque, List, Optional
+
+
+class SlotManager:
+    """Fixed pool of admission slots (continuous-batching row leases)."""
+
+    def __init__(self, capacity: int):
+        if capacity <= 0:
+            raise ValueError(f"capacity must be positive, got {capacity}")
+        self.capacity = int(capacity)
+        self._free: List[int] = list(range(capacity - 1, -1, -1))
+        self._held = set()
+
+    @property
+    def free(self) -> int:
+        return len(self._free)
+
+    @property
+    def held(self) -> int:
+        return len(self._held)
+
+    def acquire(self) -> Optional[int]:
+        """Lease one slot; None when the pool is exhausted."""
+        if not self._free:
+            return None
+        slot = self._free.pop()
+        self._held.add(slot)
+        return slot
+
+    def release(self, slot: int) -> None:
+        if slot not in self._held:
+            raise ValueError(f"slot {slot} is not held")
+        self._held.remove(slot)
+        self._free.append(slot)
+
+
+class RequestQueue:
+    """FIFO of heterogeneous requests with per-kind draining.
+
+    ``pop_kind`` removes up to ``limit`` requests of one query kind while
+    preserving the arrival order of everything else -- the coalescing
+    primitive: the engine always serves the oldest request's kind first, and
+    rides along every queued request of the same kind that fits the batch.
+    """
+
+    def __init__(self):
+        self._q: Deque = collections.deque()
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    def submit(self, request) -> None:
+        self._q.append(request)
+
+    def oldest_kind(self) -> Optional[str]:
+        return self._q[0].kind if self._q else None
+
+    def pending_kinds(self) -> List[str]:
+        """Distinct kinds in arrival order of their oldest request."""
+        seen: List[str] = []
+        for r in self._q:
+            if r.kind not in seen:
+                seen.append(r.kind)
+        return seen
+
+    def pop_kind(self, kind: str, limit: int) -> List:
+        """Remove and return up to ``limit`` requests of ``kind`` (FIFO)."""
+        taken: List = []
+        rest: List = []
+        for r in self._q:
+            if r.kind == kind and len(taken) < limit:
+                taken.append(r)
+            else:
+                rest.append(r)
+        self._q = collections.deque(rest)
+        return taken

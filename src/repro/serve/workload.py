@@ -1,0 +1,108 @@
+"""Synthetic mixed-kind request streams + the direct (pre-engine) call path.
+
+Shared by the serve driver, ``benchmarks/bench_serve.py`` and the tests:
+``mixed_requests`` builds a deterministic heterogeneous traffic sample, and
+``direct_call`` is the one-call-at-a-time jitted path the engine is measured
+against -- it doubles as the parity oracle, since the engine's contract is
+bit-compatibility with direct model calls (per-request keys included).
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.einet import EiNet
+from repro.serve.engine import Request, request_key
+
+# default traffic mix: LL-heavy with a steady sampling/decode component
+DEFAULT_MIX = (
+    "joint_ll",
+    "marginal_ll",
+    "conditional_ll",
+    "conditional_sample",
+    "joint_ll",
+    "sample",
+    "marginal_ll",
+    "mpe",
+)
+
+
+def mixed_requests(
+    num_vars: int,
+    n: int,
+    seed: int = 0,
+    mix: Sequence[str] = DEFAULT_MIX,
+) -> list:
+    """Deterministic stream of ``n`` heterogeneous requests over ``mix``."""
+    rng = np.random.RandomState(seed)
+    reqs = []
+    for i in range(n):
+        x = rng.randn(num_vars).astype(np.float32)
+        ev = rng.rand(num_vars) < 0.5
+        reqs.append(
+            Request(
+                req_id=i,
+                kind=mix[i % len(mix)],
+                x=x,
+                evidence_mask=ev,
+                query_mask=~ev,
+                seed=1000 + i,
+            )
+        )
+    return reqs
+
+
+def _per_request_call(
+    model: EiNet, params, jit_sampling: bool
+) -> Callable[[Request], jax.Array]:
+    ll = jax.jit(model.log_likelihood)
+    cll = jax.jit(model.conditional_log_likelihood)
+    cs = (
+        jax.jit(model.conditional_sample, static_argnames=("mode",))
+        if jit_sampling
+        else model.conditional_sample
+    )
+
+    def call(req: Request) -> jax.Array:
+        x = jnp.asarray(req.x)[None]
+        ev = jnp.asarray(req.evidence_mask)[None]
+        key = request_key(req.seed)
+        if req.kind == "joint_ll":
+            return ll(params, x)[0]
+        if req.kind == "marginal_ll":
+            return ll(params, x, ev)[0]
+        if req.kind == "conditional_ll":
+            qm = jnp.asarray(req.query_mask)[None]
+            return cll(params, x, qm, ev)[0]
+        if req.kind == "sample":
+            return cs(params, key, jnp.zeros_like(x), jnp.zeros_like(ev))[0]
+        if req.kind == "conditional_sample":
+            return cs(params, key, x, ev)[0]
+        if req.kind == "mpe":
+            return cs(params, key, x, ev, mode="argmax")[0]
+        raise ValueError(f"unknown kind {req.kind!r}")
+
+    return call
+
+
+def legacy_call(model: EiNet, params) -> Callable[[Request], jax.Array]:
+    """One-call-at-a-time serving with the pre-engine sampling bug intact:
+    jitted log-likelihood calls, sampling dispatched eagerly (unjitted, as
+    ``launch/serve.py:80`` shipped before this engine).  This is the
+    "current one-call-at-a-time path" the engine's >= 5x bar is measured
+    against.  (The old driver itself ran one fixed batched smoke loop, not
+    per-request serving -- it could not serve a heterogeneous stream at all,
+    so per-request dispatch is the closest meaningful baseline.)"""
+    return _per_request_call(model, params, jit_sampling=False)
+
+
+def direct_call(model: EiNet, params) -> Callable[[Request], jax.Array]:
+    """Fully-jitted one-call-at-a-time path (batch size 1, no coalescing):
+    the strong baseline, and the parity oracle -- sampling kinds use the
+    same per-request key the engine derives, so outputs are directly
+    comparable."""
+    return _per_request_call(model, params, jit_sampling=True)

@@ -96,7 +96,7 @@ def test_minibatch_statistics_accumulate_to_full_batch(setup):
 def test_m_step_respects_constraints(setup):
     net, params, x = setup
     stats = em_statistics(net, params, x)
-    new = m_step(net, stats, EMConfig(), [])
+    new = m_step(net, stats, EMConfig())
     for w in new["einsum"]:
         np.testing.assert_allclose(
             np.asarray(jnp.sum(w, axis=(-2, -1))), 1.0, rtol=1e-5

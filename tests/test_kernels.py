@@ -44,6 +44,22 @@ def test_log_einsum_exp_extreme_underflow():
     np.testing.assert_allclose(out, ref, atol=1e-3)
 
 
+@pytest.mark.parametrize("b,l,k,ko", [(5, 3, 5, 3), (4, 2, 7, 10), (9, 1, 17, 1)])
+def test_log_einsum_exp_wrapper_pads_odd_k(b, l, k, ko):
+    """Non-lane-multiple K / K_out must round-trip exactly through the ops
+    wrapper padding (regression: the kernel docstring promised padding that
+    ``ops.py`` never implemented -- odd K would fail to compile on real TPU)."""
+    w, lnl, lnr = _random_lee(jax.random.PRNGKey(10 * k + ko), b, l, k, ko)
+    wp, lp, rp = ops._pad_for_lanes(w, lnl, lnr)
+    assert (wp.shape[2] ** 2) % 128 == 0, "K^2 must land on a 128 lane multiple"
+    assert wp.shape[1] % 128 == 0, "K_out must land on a 128 lane multiple"
+    assert lp.shape == rp.shape == (b, l, wp.shape[2])
+    out = ops.log_einsum_exp(w, lnl, lnr)
+    assert out.shape == (b, l, ko)
+    ref = log_einsum_exp_ref(w, lnl, lnr)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-4)
+
+
 def test_log_einsum_exp_custom_vjp():
     w, lnl, lnr = _random_lee(jax.random.PRNGKey(1), 12, 3, 10, 10)
     gk = jax.grad(lambda *a: ops.log_einsum_exp(*a).sum(), argnums=(0, 1, 2))(
