@@ -1,0 +1,249 @@
+"""Training-pipeline benchmark -> BENCH_train.json.
+
+Measures the compiled EM step (``repro.train``: scan-accumulated microbatch
+statistics + M-step + blend as ONE donated-buffer XLA program, E-step grads
+through the fused backward Pallas kernel on TPU) against the seed's per-step
+path (per-microbatch jitted E-step dispatches, Python-loop statistic
+accumulation, separately-jitted M-step), and reports Pallas-vs-XLA gradient
+parity alongside, so the training perf trajectory has data across PRs:
+
+  PYTHONPATH=src python benchmarks/bench_train.py --smoke     # CI-sized
+  PYTHONPATH=src python benchmarks/bench_train.py             # 3-arch sweep
+
+The default sweep covers einet_rat / einet_rat_large / einet_pd at
+CPU-feasible batch sizes (full paper batches need TPU; shapes are recorded in
+the JSON so numbers are comparable across hosts).  Exit status is the parity
+gate: grad parity must hold to 1e-4 (and in --smoke mode that is the only
+gate, so CI stays robust to timer noise).
+"""
+
+from __future__ import annotations
+
+import argparse
+import datetime
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import EinetConfig, get_config
+from repro.core.em import (
+    EMConfig,
+    accumulate_statistics,
+    blend_params,
+    em_statistics,
+    m_step,
+    zeros_like_statistics,
+)
+from repro.kernels import ops
+from repro.kernels.ref import log_einsum_exp_ref
+from repro.launch.cells import build_einet
+from repro.train import TrainConfig, make_em_step
+
+SMOKE_CONFIG = EinetConfig(
+    name="einet-rat-train-smoke",
+    structure="rat",
+    num_vars=16,
+    depth=2,
+    num_repetitions=2,
+    num_sums=4,
+    batch_size=64,
+)
+
+# (arch id, benchmark batch, microbatches, timed steps) -- batches are sized
+# for the CPU container; pass --batch/--steps to override, or run on TPU for
+# the paper-scale shapes recorded in the configs.
+DEFAULT_CELLS = (
+    ("einet_rat", 256, 4, 3),
+    ("einet_rat_large", 16, 2, 2),
+    ("einet_pd", 32, 2, 2),
+)
+
+PARITY_TOL = 1e-4
+
+
+def _grad_parity(model) -> float:
+    """Max abs diff, fused-backward Pallas VJP vs XLA autodiff, on the
+    model's widest einsum layer (its real (L, K_out, K) shapes)."""
+    spec = max(model.pair_specs, key=lambda s: s.num_partitions)
+    l, k, ko = min(spec.num_partitions, 8), spec.k_in, spec.k_out
+    key = jax.random.PRNGKey(0)
+    k1, k2, k3 = jax.random.split(key, 3)
+    w = jax.nn.softmax(
+        jax.random.normal(k1, (l, ko, k, k)).reshape(l, ko, -1), -1
+    ).reshape(l, ko, k, k)
+    lnl = -jnp.abs(jax.random.normal(k2, (16, l, k))) * 10.0
+    lnr = -jnp.abs(jax.random.normal(k3, (16, l, k))) * 10.0
+    gk = jax.grad(lambda *a: ops.log_einsum_exp(*a).mean(), argnums=(0, 1, 2))(
+        w, lnl, lnr
+    )
+    gr = jax.grad(
+        lambda *a: log_einsum_exp_ref(*a).mean(), argnums=(0, 1, 2)
+    )(w, lnl, lnr)
+    return max(
+        float(np.max(np.abs(np.asarray(a) - np.asarray(b))))
+        for a, b in zip(gk, gr)
+    )
+
+
+def _time_steps(step_fn, params, x, steps: int, reps: int) -> float:
+    """Best-of-reps mean seconds per step, with a chained warm-up step so the
+    steady-state (params-in == params-out aval) program is what gets timed."""
+    p, _ = step_fn(params, x)
+    p, _ = step_fn(p, x)
+    jax.block_until_ready(jax.tree_util.tree_leaves(p)[0])
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        p = params
+        for _ in range(steps):
+            p, ll = step_fn(p, x)
+        jax.block_until_ready(jax.tree_util.tree_leaves(p)[0])
+        best = min(best, (time.perf_counter() - t0) / steps)
+    return best
+
+
+def _per_step_path(model, em_cfg: EMConfig, num_microbatches: int):
+    """The seed's training path: one jitted dispatch PER microbatch, host
+    Python-loop accumulation, separately-jitted M-step + blend."""
+    stats_jit = jax.jit(lambda p, xb: em_statistics(model, p, xb))
+    acc_jit = jax.jit(accumulate_statistics)
+
+    def finish(p, st):
+        mini = m_step(model, st, em_cfg)
+        return (
+            blend_params(model, p, mini, em_cfg.step_size),
+            st["ll"] / st["count"],
+        )
+
+    finish_jit = jax.jit(finish)
+
+    def step(params, x):
+        mb = x.shape[0] // num_microbatches
+        acc = zeros_like_statistics(model, params)
+        for i in range(num_microbatches):
+            acc = acc_jit(acc, stats_jit(params, x[i * mb:(i + 1) * mb]))
+        return finish_jit(params, acc)
+
+    return step
+
+
+def bench_cell(arch: str, cfg: EinetConfig, batch: int, microbatches: int,
+               steps: int, reps: int) -> dict:
+    model = build_einet(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    d = model.num_vars
+    x = jnp.asarray(
+        np.random.RandomState(0).randn(batch, d).astype(np.float32)
+    )
+    em_cfg = EMConfig()
+
+    # donate=False: the benchmark re-feeds the SAME params pytree to both
+    # paths and across timing reps; donation would delete the buffers after
+    # the first fused call on TPU/GPU
+    fused = make_em_step(
+        model,
+        TrainConfig(em=em_cfg, num_microbatches=microbatches, donate=False),
+    )
+    per_step = _per_step_path(model, em_cfg, microbatches)
+
+    # warm-up both paths (compile), checking they agree while we're at it
+    t0 = time.perf_counter()
+    pf, ll_f = fused(params, x)
+    jax.block_until_ready(jax.tree_util.tree_leaves(pf)[0])
+    compile_fused_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    pp, ll_p = per_step(params, x)
+    jax.block_until_ready(jax.tree_util.tree_leaves(pp)[0])
+    compile_per_step_s = time.perf_counter() - t0
+    step_parity = float(
+        max(
+            np.max(np.abs(np.asarray(a) - np.asarray(b)))
+            for a, b in zip(
+                jax.tree_util.tree_leaves(pf), jax.tree_util.tree_leaves(pp)
+            )
+            if np.asarray(a).size  # unmixed layers carry (0, 0, K) stubs
+        )
+    )
+
+    fused_s = _time_steps(fused, params, x, steps, reps)
+    per_step_s = _time_steps(per_step, params, x, steps, reps)
+    parity = _grad_parity(model)
+    return {
+        "arch": cfg.name,
+        "arch_id": arch,
+        "num_vars": d,
+        "num_sums": model.K,
+        "num_params_m": round(model.num_params(params) / 1e6, 3),
+        "batch": batch,
+        "microbatches": microbatches,
+        "steps_timed": steps,
+        "fused_ms_per_step": round(fused_s * 1e3, 2),
+        "per_step_ms_per_step": round(per_step_s * 1e3, 2),
+        "fused_steps_per_s": round(1.0 / fused_s, 3),
+        "per_step_steps_per_s": round(1.0 / per_step_s, 3),
+        "speedup": round(per_step_s / fused_s, 3),
+        "compile_fused_s": round(compile_fused_s, 2),
+        "compile_per_step_s": round(compile_per_step_s, 2),
+        "update_parity_max_abs_diff": step_parity,
+        "grad_parity_max_abs_diff": parity,
+        "grad_parity_ok": parity <= PARITY_TOL,
+    }
+
+
+def main(smoke: bool = False, archs=None, batch: int = 0, steps: int = 0,
+         reps: int = 2, out: str = "BENCH_train.json") -> dict:
+    if smoke:
+        cells = [("smoke", SMOKE_CONFIG, SMOKE_CONFIG.batch_size, 4, 3)]
+        reps = 1
+    else:
+        cells = [
+            (a, get_config(a), batch or b, m, steps or s)
+            for a, b, m, s in DEFAULT_CELLS
+            if archs is None or a in archs
+        ]
+    results = []
+    for arch, cfg, b, m, s in cells:
+        print(f"[bench_train] {cfg.name}: batch={b} microbatches={m} ...")
+        r = bench_cell(arch, cfg, b, m, s, reps)
+        print(
+            f"  fused {r['fused_ms_per_step']:.1f} ms/step vs per-step "
+            f"{r['per_step_ms_per_step']:.1f} ms/step "
+            f"(x{r['speedup']:.2f}); grad parity "
+            f"{r['grad_parity_max_abs_diff']:.2e}"
+        )
+        results.append(r)
+    parity_ok = all(r["grad_parity_ok"] for r in results)
+    report = {
+        "results": results,
+        "smoke": smoke,
+        "backend": jax.default_backend(),
+        "parity_ok": parity_ok,
+        "timestamp": datetime.datetime.now(datetime.timezone.utc).isoformat(),
+    }
+    if not parity_ok:
+        print(f"GRAD PARITY FAILURE (> {PARITY_TOL})")
+    if out:
+        with open(out, "w") as f:
+            json.dump(report, f, indent=2, sort_keys=True)
+        print(f"wrote {out}")
+    return report if parity_ok else {}
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny model, parity-gated only (CI profile)")
+    ap.add_argument("--arch", action="append", default=None,
+                    help="restrict to this arch id (repeatable)")
+    ap.add_argument("--batch", type=int, default=0,
+                    help="override the per-cell benchmark batch")
+    ap.add_argument("--steps", type=int, default=0)
+    ap.add_argument("--reps", type=int, default=2)
+    ap.add_argument("--out", default="BENCH_train.json")
+    args = ap.parse_args()
+    result = main(smoke=args.smoke, archs=args.arch, batch=args.batch,
+                  steps=args.steps, reps=args.reps, out=args.out)
+    raise SystemExit(0 if result else 1)

@@ -1,5 +1,10 @@
-"""Assemble EXPERIMENTS.md from the dry-run artifacts + the hand-written
-§Perf iteration log (kept in benchmarks/perf_log.md).
+"""Assemble EXPERIMENTS.md from the dry-run artifacts + benchmark JSONs +
+the hand-written §Perf iteration log (kept in benchmarks/perf_log.md).
+
+Degrades gracefully: sections whose artifacts have not been generated on
+this host (the dry-run sweep needs the 512-device subprocess run) render a
+placeholder instead of crashing, so the §Perf log that module docstrings
+cite is always available.
 
 PYTHONPATH=src:. python -m benchmarks.make_experiments_md
 """
@@ -9,8 +14,13 @@ import os
 
 from benchmarks import roofline
 
+_MISSING = ("_not yet generated on this host — run "
+            "`python -m repro.launch.dryrun` first._")
+
 
 def dryrun_summary(art_dir: str, mesh: str) -> str:
+    if not os.path.isdir(art_dir):
+        return _MISSING
     rows = []
     ok = skip = 0
     for f in sorted(os.listdir(art_dir)):
@@ -40,14 +50,49 @@ def dryrun_summary(art_dir: str, mesh: str) -> str:
             + "\n".join(rows))
 
 
+def roofline_summary(art_dir: str, mesh: str) -> str:
+    if not os.path.isdir(art_dir):
+        return _MISSING
+    return roofline.to_markdown(roofline.build_table(art_dir, mesh))
+
+
+def bench_summary() -> str:
+    """One row per benchmark JSON snapshot present at the repo root."""
+    parts = []
+    if os.path.isfile("BENCH_serve.json"):
+        r = json.load(open("BENCH_serve.json"))
+        parts.append(
+            f"**Serving** (`BENCH_serve.json`, {r.get('arch')}): engine "
+            f"{r.get('engine_qps', 0):.1f} req/s — "
+            f"x{r.get('speedup', 0):.1f} vs the pre-engine per-request path, "
+            f"x{r.get('speedup_vs_jitted', 0):.1f} vs a fully-jitted "
+            f"per-request baseline; parity {r.get('parity_max_abs_diff')}."
+        )
+    if os.path.isfile("BENCH_train.json"):
+        r = json.load(open("BENCH_train.json"))
+        rows = ["| arch | batch (microbatches) | compiled ms/step | "
+                "per-step ms/step | speedup | grad parity |",
+                "|" + "---|" * 6]
+        for c in r.get("results", []):
+            rows.append(
+                f"| {c['arch']} | {c['batch']} ({c['microbatches']}) | "
+                f"{c['fused_ms_per_step']} | {c['per_step_ms_per_step']} | "
+                f"x{c['speedup']} | {c['grad_parity_max_abs_diff']:.1e} |"
+            )
+        parts.append(
+            "**Training** (`BENCH_train.json`, backend "
+            f"{r.get('backend')}): compiled EM step vs the seed's per-step "
+            "path.\n\n" + "\n".join(rows)
+        )
+    return "\n\n".join(parts) if parts else _MISSING
+
+
 def main():
-    base = roofline.to_markdown(roofline.build_table("artifacts/dryrun_baseline", "16x16"))
+    base = roofline_summary("artifacts/dryrun_baseline", "16x16")
     opt_dir = "artifacts/dryrun_opt" if os.path.isdir("artifacts/dryrun_opt") \
         else "artifacts/dryrun"
-    opt = roofline.to_markdown(roofline.build_table(opt_dir, "16x16"))
+    opt = roofline_summary(opt_dir, "16x16")
     single = dryrun_summary(opt_dir, "16x16")
-    multi = dryrun_summary("artifacts/dryrun", "2x16x16") if any(
-        "2x16x16" in f or True for f in os.listdir("artifacts/dryrun")) else ""
     multi = dryrun_summary("artifacts/dryrun", "2x16x16")
     perf = open("benchmarks/perf_log.md").read()
     header = open("benchmarks/experiments_header.md").read()
@@ -56,6 +101,7 @@ def main():
     out = out.replace("{{DRYRUN_MULTI}}", multi)
     out = out.replace("{{ROOFLINE_BASELINE}}", base)
     out = out.replace("{{ROOFLINE_OPT}}", opt)
+    out = out.replace("{{BENCHES}}", bench_summary())
     out = out.replace("{{PERF_LOG}}", perf)
     with open("EXPERIMENTS.md", "w") as f:
         f.write(out)

@@ -21,10 +21,11 @@ import numpy as np
 
 from repro.checkpoint import CheckpointManager
 from repro.core import EiNet, Normal, random_binary_trees
-from repro.core.em import EMConfig, stochastic_em_update
+from repro.core.em import EMConfig
 from repro.data.pipeline import ShardedLoader
 from repro.data.synthetic import gaussian_mixture_images
 from repro.dist import fault_tolerance as ft
+from repro.train import TrainConfig, make_em_step
 
 
 def main():
@@ -54,7 +55,10 @@ def main():
     loader = ShardedLoader(make_batch, global_batch=args.batch)
 
     emcfg = EMConfig(step_size=0.3)
-    step_fn_jit = jax.jit(lambda p, b: stochastic_em_update(net, p, b, emcfg))
+    # one compiled program per step (repro.train).  donate=False: the
+    # fault-tolerant loop may replay from the initial params after a
+    # pre-first-checkpoint failure (--kill-at demonstrates exactly that).
+    step_fn_jit = make_em_step(net, TrainConfig(em=emcfg, donate=False))
     lls = []
 
     def step_fn(state, batch):

@@ -5,6 +5,7 @@ from repro.core.einet import QUERY_KINDS, EiNet
 from repro.core.em import (
     EMConfig,
     accumulate_statistics,
+    blend_params,
     em_statistics,
     em_update,
     m_step,
@@ -35,6 +36,7 @@ __all__ = [
     "em_update",
     "m_step",
     "stochastic_em_update",
+    "blend_params",
     "accumulate_statistics",
     "zeros_like_statistics",
     "Normal",

@@ -284,7 +284,11 @@ class EiNet:
                 )
             else:
                 mixing_v.append(jnp.zeros((0, 0, spec.k_out)))
-        class_prior = jnp.full((self.num_classes,), 1.0 / self.num_classes)
+        # strong float32: a weak-typed prior changes aval after the first EM
+        # update and forces a silent recompile of every jitted training step
+        class_prior = jnp.full(
+            (self.num_classes,), 1.0 / self.num_classes, dtype=jnp.float32
+        )
         return {
             "phi": phi,
             "einsum": einsum_w,

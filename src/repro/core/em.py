@@ -19,6 +19,11 @@ Distribution: the sufficient statistics are *sums over data*, so the
 distributed E-step is a ``psum`` over the data axes -- structurally identical
 to gradient all-reduce (see ``repro.dist``).  ``em_update`` takes an optional
 ``axis_names`` for exactly that.
+
+This module holds the *algorithm*; the compiled training pipeline --
+microbatch statistic accumulation under ``lax.scan``, donated-buffer jitted
+update steps -- lives in ``repro.train`` (EXPERIMENTS.md §Perf, "compiled EM
+step").
 """
 
 from __future__ import annotations
@@ -174,6 +179,32 @@ def em_update(
     return new, stats["ll"] / stats["count"]
 
 
+def blend_params(
+    model: EiNet,
+    params: Dict[str, Any],
+    mini: Dict[str, Any],
+    step_size: float,
+) -> Dict[str, Any]:
+    """Sato online-EM interpolation (Eqs. 8/9):  p <- (1-l) p + l p_mini.
+
+    Shared by ``stochastic_em_update`` and the compiled training pipeline
+    (``repro.train``), so both paths apply the identical update -- including
+    the phi re-projection that keeps EF parameters in their valid domain
+    after interpolation.
+    """
+    lam = step_size
+
+    def blend(old, new):
+        return (1.0 - lam) * old + lam * new
+
+    return {
+        "phi": model.ef.project_phi(blend(params["phi"], mini["phi"])),
+        "einsum": [blend(o, n) for o, n in zip(params["einsum"], mini["einsum"])],
+        "mixing": [blend(o, n) for o, n in zip(params["mixing"], mini["mixing"])],
+        "class_prior": blend(params["class_prior"], mini["class_prior"]),
+    }
+
+
 def stochastic_em_update(
     model: EiNet,
     params: Dict[str, Any],
@@ -182,19 +213,8 @@ def stochastic_em_update(
     axis_names: Optional[Sequence[str]] = None,
 ):
     """Sato-style online EM (Eqs. 8/9): blend minibatch M-step with step lambda."""
-    lam = cfg.step_size
     mini, ll = em_update(model, params, x, cfg, axis_names)
-
-    def blend(old, new):
-        return (1.0 - lam) * old + lam * new
-
-    out = {
-        "phi": model.ef.project_phi(blend(params["phi"], mini["phi"])),
-        "einsum": [blend(o, n) for o, n in zip(params["einsum"], mini["einsum"])],
-        "mixing": [blend(o, n) for o, n in zip(params["mixing"], mini["mixing"])],
-        "class_prior": blend(params["class_prior"], mini["class_prior"]),
-    }
-    return out, ll
+    return blend_params(model, params, mini, cfg.step_size), ll
 
 
 def accumulate_statistics(acc: Dict[str, Any], new: Dict[str, Any]) -> Dict[str, Any]:

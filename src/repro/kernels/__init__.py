@@ -7,7 +7,10 @@ Kernels run compiled on TPU and in interpret mode on CPU; ``ref.py`` holds the
 pure-jnp oracles that define their semantics.
 """
 
-from repro.kernels import ops, ref
-from repro.kernels.ops import flash_attention, log_einsum_exp
+from repro.kernels import dispatch, ops, ref
+from repro.kernels.ops import flash_attention, log_einsum_exp, pad_for_lanes
 
-__all__ = ["ops", "ref", "flash_attention", "log_einsum_exp"]
+__all__ = [
+    "dispatch", "ops", "ref", "flash_attention", "log_einsum_exp",
+    "pad_for_lanes",
+]

@@ -1,0 +1,25 @@
+"""Backend dispatch for the Pallas kernels.
+
+This is the single place that decides whether a kernel runs compiled (TPU)
+or in interpret mode (CPU validation / fallback).  Kernel entry points take
+``interpret=None`` and resolve it here, so a direct caller on TPU gets the
+compiled kernel without having to know about interpret mode at all; passing
+an explicit bool remains possible for tests that pin interpret mode.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def resolve_interpret(interpret: Optional[bool]) -> bool:
+    """None -> interpret everywhere except TPU; a bool is taken verbatim."""
+    if interpret is None:
+        return not on_tpu()
+    return bool(interpret)

@@ -26,6 +26,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.layers import NEG_INF
+from repro.kernels.dispatch import resolve_interpret
 
 
 def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *, scale,
@@ -80,12 +81,16 @@ def flash_attention_pallas(
     scale: float | None = None,
     block_q: int = 128,
     block_k: int = 128,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
     """q: (BH, Sq, Dh); k, v: (BH, Sk, Dh) -- heads pre-folded into batch.
 
+    ``interpret=None`` defers to backend dispatch (compiled on TPU,
+    interpret elsewhere); an explicit bool pins the mode.
+
     Returns (BH, Sq, Dh) float32.
     """
+    interpret = resolve_interpret(interpret)
     bh, sq, dh = q.shape
     sk = k.shape[1]
     if scale is None:

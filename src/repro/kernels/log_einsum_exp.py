@@ -1,4 +1,5 @@
-"""Fused log-einsum-exp Pallas TPU kernel: the paper's core op (Eq. 4/5).
+"""Fused log-einsum-exp Pallas TPU kernels: the paper's core op (Eq. 4/5),
+forward and backward.
 
 TPU adaptation of the paper's GPU einsum dispatch (DESIGN.md §2):
 
@@ -15,35 +16,78 @@ TPU adaptation of the paper's GPU einsum dispatch (DESIGN.md §2):
   * Grid = (L, B / B_t): layer-nodes are embarrassingly parallel; the batch is
     tiled so the working set  B_t*K^2 + K^2*K_out  floats stays within VMEM.
     For MXU efficiency K^2 and K_out must be padded to lane multiples of
-    128; ``_pad_for_lanes`` in ``ops.py`` handles padding/unpadding (K is
+    128; ``pad_for_lanes`` in ``ops.py`` handles padding/unpadding (K is
     rounded up to a multiple of 16 so K^2 lands on a 128 multiple, K_out to a
     full 128 lane; padded ln entries are -inf = log 0, padded weights 0, so
     the contraction is exact).
 
-Validated against ``ref.log_einsum_exp_ref`` in interpret mode (CPU) across
-shape/dtype sweeps -- see ``tests/test_kernels.py``.
+The backward kernel (``log_einsum_exp_bwd_pallas``) is the EM hot path: the
+paper's E-step is one ``jax.grad`` over this op (§3.5), so training spends
+most of its FLOPs here.  It re-derives the forward's stabilized frame from
+the saved residuals -- the *same* NEG_INF clamp on the row maxes as the
+forward (frame mismatch on saturated rows was a live bug, see tests), and
+the stabilized sum ``s`` recomputed with the forward's own MXU contraction
+so it is bit-identical to what the forward logged.  (Reconstructing
+``s = exp(out - a - a')`` from the saved output is NOT exact: float32
+swallows ``log s`` whenever ``|a + a'|`` is astronomically larger, e.g. on
+fully-masked NEG_INF rows, skewing every gradient of that row.)  It then
+emits all three gradients in one fused pass:
+
+  dW[l,k,ij]    = sum_b  ginv[b,k] (el x er)[b,ij]   -- a (K_out, B_t) @
+                  (B_t, K^2) MXU contraction, accumulated across batch tiles
+                  by revisiting the same output block (batch is the innermost,
+                  sequential grid axis);
+  dln via  c[b,ij] = sum_k ginv[b,k] W[l,k,ij]       -- a (B_t, K_out) @
+                  (K_out, K^2) MXU contraction, then VPU row/col reductions
+                  of  c * (el x er)  give  dln_left / dln_right.
+
+where ``ginv = g / s`` is the cotangent divided by the stabilized sum.  The
+outer product appears once in VMEM and feeds all three contractions; nothing
+K^2-sized ever touches HBM except dW itself.
+
+Validated against autodiff of ``ref.log_einsum_exp_ref`` in interpret mode
+(CPU) across shape/dtype sweeps -- see ``tests/test_kernels.py``.
 """
 
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.layers import NEG_INF
+from repro.kernels.dispatch import resolve_interpret
+
+# Floor for the stabilized sum when dividing the cotangent: s in (0, K^2] by
+# construction, but fully-saturated rows can drive it to exactly 0.  Must be a
+# NORMAL float32: XLA flushes subnormals to zero, so a 1e-38 floor becomes
+# g / 0 = inf on saturated rows.  Any legitimate s is bounded below by the
+# Laplace-floored weight of the row-argmax cell (>= 1e-12), far above this.
+_S_FLOOR = 1e-30
 
 
-def _kernel(w_ref, l_ref, r_ref, o_ref):
-    ln_l = l_ref[:, 0, :]  # (B_t, K)
-    ln_r = r_ref[:, 0, :]  # (B_t, K)
-    a = jnp.max(ln_l, axis=-1, keepdims=True)
-    ap = jnp.max(ln_r, axis=-1, keepdims=True)
-    a = jnp.maximum(a, NEG_INF)
-    ap = jnp.maximum(ap, NEG_INF)
+def _stabilized_frame(ln_l, ln_r):
+    """The forward's exact stabilization: clamped row maxes + exp'd inputs.
+
+    The NEG_INF clamp is part of the op's definition (layers.py applies it in
+    the XLA path too); forward and backward MUST share it so the backward's
+    reconstructed ``s = exp(out - a - a')`` lives in the same frame the
+    forward emitted ``out`` in.
+    """
+    a = jnp.maximum(jnp.max(ln_l, axis=-1, keepdims=True), NEG_INF)
+    ap = jnp.maximum(jnp.max(ln_r, axis=-1, keepdims=True), NEG_INF)
     el = jnp.exp(ln_l - a)  # (B_t, K), VPU
     er = jnp.exp(ln_r - ap)
+    return a, ap, el, er
+
+
+def _fwd_kernel(w_ref, l_ref, r_ref, o_ref):
+    ln_l = l_ref[:, 0, :]  # (B_t, K)
+    ln_r = r_ref[:, 0, :]  # (B_t, K)
+    a, ap, el, er = _stabilized_frame(ln_l, ln_r)
     bt, k = el.shape
     # outer product in VMEM: (B_t, K, K) -> (B_t, K^2); never leaves the chip
     prod = (el[:, :, None] * er[:, None, :]).reshape(bt, k * k)
@@ -54,38 +98,89 @@ def _kernel(w_ref, l_ref, r_ref, o_ref):
     o_ref[:, 0, :] = (a + ap + jnp.log(s)).astype(o_ref.dtype)
 
 
+def _bwd_kernel(w_ref, l_ref, r_ref, g_ref, gw_ref, gl_ref, gr_ref):
+    bi = pl.program_id(1)
+    ln_l = l_ref[:, 0, :]  # (B_t, K)
+    ln_r = r_ref[:, 0, :]
+    a, ap, el, er = _stabilized_frame(ln_l, ln_r)
+    g = g_ref[:, 0, :].astype(jnp.float32)
+    bt, k = el.shape
+    k_out = g.shape[-1]
+    prod = (el[:, :, None] * er[:, None, :]).reshape(bt, k * k)
+    wmat = w_ref[0].reshape(k_out, k * k)
+    # the forward's stabilized sum, recomputed with the forward's exact
+    # contraction (same operands, same MXU op -> bit-identical frame)
+    s = jnp.dot(prod, wmat.T, preferred_element_type=jnp.float32)
+    ginv = g / jnp.maximum(s, _S_FLOOR)  # (B_t, K_out)
+    # dW: contract the batch tile away on the MXU -- (K_out, B_t) @ (B_t, K^2)
+    gw_t = jax.lax.dot_general(
+        ginv, prod, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).reshape(k_out, k, k)
+    # dln: c = (B_t, K_out) @ (K_out, K^2) on the MXU, then VPU reductions
+    c = jnp.dot(ginv, wmat, preferred_element_type=jnp.float32)
+    c = c.reshape(bt, k, k)
+    gl_ref[:, 0, :] = (el * jnp.sum(c * er[:, None, :], axis=2)).astype(
+        gl_ref.dtype
+    )
+    gr_ref[:, 0, :] = (er * jnp.sum(c * el[:, :, None], axis=1)).astype(
+        gr_ref.dtype
+    )
+
+    # batch tiles revisit the same (1, K_out, K, K) dW block: init then
+    # accumulate (the batch axis is the innermost, sequential grid axis)
+    @pl.when(bi == 0)
+    def _init():
+        gw_ref[0] = gw_t.astype(gw_ref.dtype)
+
+    @pl.when(bi > 0)
+    def _acc():
+        gw_ref[0] += gw_t.astype(gw_ref.dtype)
+
+
+def _pad_batch(block_b, *arrays):
+    """Pad the leading batch axis of every array with zeros to a multiple of
+    ``block_b``.  Zero rows are finite and harmless: the forward slices them
+    off, and the backward sees zero cotangents there."""
+    b = arrays[0].shape[0]
+    pad_b = (-b) % block_b
+    if not pad_b:
+        return arrays
+    return tuple(
+        jnp.concatenate([x, jnp.zeros((pad_b,) + x.shape[1:], x.dtype)], 0)
+        for x in arrays
+    )
+
+
 @functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
 def log_einsum_exp_pallas(
     w: jax.Array,
     ln_left: jax.Array,
     ln_right: jax.Array,
     block_b: int = 128,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ) -> jax.Array:
-    """Fused kernel entry point.
+    """Fused forward kernel entry point.
 
     Args:
       w:        (L, K_out, K, K) linear-domain weights.
       ln_left:  (B, L, K) log-domain inputs.
       ln_right: (B, L, K).
       block_b:  batch tile (the grid's inner parallel dim).
-      interpret: run the kernel body in Python (CPU validation mode).
+      interpret: None defers to backend dispatch (compiled on TPU, interpret
+        elsewhere); an explicit bool pins the mode (CPU validation in tests).
 
     Returns: (B, L, K_out) float32.
     """
+    interpret = resolve_interpret(interpret)
     b, l, k = ln_left.shape
     k_out = w.shape[1]
     block_b = min(block_b, b)
-    pad_b = (-b) % block_b
-    if pad_b:
-        # padded rows: ln = 0 everywhere is finite and harmless (sliced off)
-        zeros = jnp.zeros((pad_b, l, k), ln_left.dtype)
-        ln_left = jnp.concatenate([ln_left, zeros], 0)
-        ln_right = jnp.concatenate([ln_right, zeros], 0)
+    ln_left, ln_right = _pad_batch(block_b, ln_left, ln_right)
     bp = ln_left.shape[0]
     grid = (l, bp // block_b)
     out = pl.pallas_call(
-        _kernel,
+        _fwd_kernel,
         out_shape=jax.ShapeDtypeStruct((bp, l, k_out), jnp.float32),
         grid=grid,
         in_specs=[
@@ -96,4 +191,57 @@ def log_einsum_exp_pallas(
         out_specs=pl.BlockSpec((block_b, 1, k_out), lambda li, bi: (bi, li, 0)),
         interpret=interpret,
     )(w, ln_left, ln_right)
-    return out[:b] if pad_b else out
+    return out[:b] if bp != b else out
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def log_einsum_exp_bwd_pallas(
+    w: jax.Array,
+    ln_left: jax.Array,
+    ln_right: jax.Array,
+    g: jax.Array,
+    block_b: int = 128,
+    interpret: Optional[bool] = None,
+):
+    """Fused backward kernel entry point (all three gradients in one pass).
+
+    Args:
+      w:        (L, K_out, K, K) linear-domain weights (forward residual).
+      ln_left:  (B, L, K) log-domain inputs (forward residual).
+      ln_right: (B, L, K).
+      g:        (B, L, K_out) cotangent.
+      block_b / interpret: as in the forward.
+
+    Returns: (gw (L, K_out, K, K), gl (B, L, K), gr (B, L, K)), all float32.
+    """
+    interpret = resolve_interpret(interpret)
+    b, l, k = ln_left.shape
+    k_out = w.shape[1]
+    block_b = min(block_b, b)
+    ln_left, ln_right, g = _pad_batch(block_b, ln_left, ln_right, g)
+    bp = ln_left.shape[0]
+    grid = (l, bp // block_b)
+    gw, gl, gr = pl.pallas_call(
+        _bwd_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((l, k_out, k, k), jnp.float32),
+            jax.ShapeDtypeStruct((bp, l, k), jnp.float32),
+            jax.ShapeDtypeStruct((bp, l, k), jnp.float32),
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, k_out, k, k), lambda li, bi: (li, 0, 0, 0)),
+            pl.BlockSpec((block_b, 1, k), lambda li, bi: (bi, li, 0)),
+            pl.BlockSpec((block_b, 1, k), lambda li, bi: (bi, li, 0)),
+            pl.BlockSpec((block_b, 1, k_out), lambda li, bi: (bi, li, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, k_out, k, k), lambda li, bi: (li, 0, 0, 0)),
+            pl.BlockSpec((block_b, 1, k), lambda li, bi: (bi, li, 0)),
+            pl.BlockSpec((block_b, 1, k), lambda li, bi: (bi, li, 0)),
+        ),
+        interpret=interpret,
+    )(w, ln_left, ln_right, g)
+    if bp != b:
+        gl, gr = gl[:b], gr[:b]
+    return gw, gl, gr

@@ -1,16 +1,23 @@
 """Jitted public wrappers for the Pallas kernels, with backend dispatch.
 
 On TPU the Pallas kernels run compiled; on CPU (this container) they run in
-interpret mode, and the pure-XLA reference paths in ``ref.py`` remain
-available as the production fallback.  ``log_einsum_exp`` carries a custom
-VJP so the kernelized forward still supports the paper's autodiff-EM (the
-backward is expressed with plain einsums; a fused backward kernel is listed
-as future work in EXPERIMENTS.md §Perf).
+interpret mode -- ``repro.kernels.dispatch`` is the single place that
+decides, so kernel entry points never expose a CPU-validation default to
+direct callers.  The pure-XLA reference paths in ``ref.py`` remain available
+as the production fallback.
+
+``log_einsum_exp`` carries a custom VJP wired to the fused backward kernel
+in ``log_einsum_exp.py``: the forward saves (w, ln_left, ln_right) as
+residuals, and the backward recomputes the forward's stabilized frame from
+them bit-exactly (EXPERIMENTS.md §Perf, "EM via the fused backward").  Both
+directions share one exact-padding contract (``pad_for_lanes``): K rounded
+up to a multiple of 16, K_out to a 128 lane, padded ln entries -inf, padded
+weights and cotangents 0, so padding changes no contraction bit-exactly and
+gradients of padded lanes are identically zero.
 """
 
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax
@@ -18,68 +25,67 @@ import jax.numpy as jnp
 
 from repro.kernels import ref as _ref
 from repro.kernels.flash_attention import flash_attention_pallas
-from repro.kernels.log_einsum_exp import log_einsum_exp_pallas
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
+from repro.kernels.log_einsum_exp import (
+    log_einsum_exp_bwd_pallas,
+    log_einsum_exp_pallas,
+)
 
 
 # --------------------------------------------------------------------------
-# log-einsum-exp: fused forward + einsum backward (custom VJP)
+# log-einsum-exp: fused forward + fused backward (custom VJP)
 # --------------------------------------------------------------------------
-def _pad_for_lanes(w, ln_left, ln_right):
+def pad_for_lanes(w, ln_left, ln_right, *kout_arrays):
     """Pad the contraction dims to MXU lane multiples of 128.
 
+    The one padding contract shared by the forward and backward kernels:
     K is rounded up to a multiple of 16 (so the flattened K^2 product axis is
     a multiple of 256 >= one 128 lane), K_out to a full 128 lane.  Padded
     ``ln`` entries are -inf (= log 0, exp'd to exactly 0 inside the kernel)
-    and padded weights are 0, so the padded contraction is bit-exact; the
-    caller slices the K_out padding off the output.
+    and padded weights are 0, so the padded contraction is bit-exact; callers
+    slice the padding off the outputs (``unpad_lanes``).  Extra
+    ``kout_arrays`` -- (B, L, K_out)-shaped tensors such as the saved forward
+    output or the backward cotangent -- are zero-padded on the K_out lane
+    (zeros are inert there: padded cotangent columns are zero, so the padded
+    frame value never matters).
     """
     _, k_out, k, _ = w.shape
     k_p = -(-k // 16) * 16
     ko_p = -(-k_out // 128) * 128
     if (k_p, ko_p) == (k, k_out):
-        return w, ln_left, ln_right
+        return (w, ln_left, ln_right) + kout_arrays
     w = jnp.pad(w, ((0, 0), (0, ko_p - k_out), (0, k_p - k), (0, k_p - k)))
     lane = ((0, 0), (0, 0), (0, k_p - k))
     ln_left = jnp.pad(ln_left, lane, constant_values=-jnp.inf)
     ln_right = jnp.pad(ln_right, lane, constant_values=-jnp.inf)
-    return w, ln_left, ln_right
+    kout_lane = ((0, 0), (0, 0), (0, ko_p - k_out))
+    padded = tuple(jnp.pad(x, kout_lane) for x in kout_arrays)
+    return (w, ln_left, ln_right) + padded
 
 
 @jax.custom_vjp
 def log_einsum_exp(w: jax.Array, ln_left: jax.Array,
                    ln_right: jax.Array) -> jax.Array:
     k_out = w.shape[1]
-    wp, lp, rp = _pad_for_lanes(w, ln_left, ln_right)
-    out = log_einsum_exp_pallas(wp, lp, rp, interpret=not _on_tpu())
+    wp, lp, rp = pad_for_lanes(w, ln_left, ln_right)
+    out = log_einsum_exp_pallas(wp, lp, rp)
     return out[..., :k_out]
 
 
 def _lee_fwd(w, ln_left, ln_right):
     out = log_einsum_exp(w, ln_left, ln_right)
-    return out, (w, ln_left, ln_right, out)
+    # Residuals are the *unpadded* operands: the backward re-applies the
+    # identical padding contract (cheap, fused into the same program) and
+    # recomputes the stabilized frame bit-exactly, so nothing padded -- and
+    # no forward output -- needs to live in residual memory.
+    return out, (w, ln_left, ln_right)
 
 
 def _lee_bwd(res, g):
-    w, ln_l, ln_r, out = res
-    # d out[b,l,k] / d W[l,k,i,j]      = exp(ln_l_i + ln_r_j - out_k)
-    # d out[b,l,k] / d ln_l[b,l,i]     = sum_j W[l,k,i,j] exp(ln_l_i + ln_r_j - out_k)
-    # Work in the stabilized frame to avoid overflow (the maxes cancel exactly
-    # in the analytic derivative, so this is just Eq. 4 re-applied backwards):
-    a = jnp.max(ln_l, axis=-1, keepdims=True)
-    ap = jnp.max(ln_r, axis=-1, keepdims=True)
-    eln = jnp.exp(ln_l - a)
-    ern = jnp.exp(ln_r - ap)
-    # s[b,l,k] = exp(out - a - ap)
-    s = jnp.exp(out - a - ap)
-    ginv = g / jnp.maximum(s, 1e-38)  # (B, L, K_out)
-    gw = jnp.einsum("blk,bli,blj->lkij", ginv, eln, ern)
-    gl = jnp.einsum("blk,lkij,blj->bli", ginv, w, ern) * eln
-    gr = jnp.einsum("blk,lkij,bli->blj", ginv, w, eln) * ern
-    return gw, gl, gr
+    w, ln_l, ln_r = res
+    _, k_out, k, _ = w.shape
+    wp, lp, rp, gp = pad_for_lanes(w, ln_l, ln_r, g)
+    gw, gl, gr = log_einsum_exp_bwd_pallas(wp, lp, rp, gp)
+    return gw[:, :k_out, :k, :k], gl[..., :k], gr[..., :k]
 
 
 log_einsum_exp.defvjp(_lee_fwd, _lee_bwd)
@@ -109,7 +115,7 @@ def flash_attention(
     vf = v.reshape(b * hq, -1, dh)
     out = flash_attention_pallas(
         qf, kf, vf, causal=causal, scale=scale, block_q=block_q,
-        block_k=block_k, interpret=not _on_tpu(),
+        block_k=block_k,
     )
     return out.reshape(b, hq, sq, dh)
 

@@ -25,7 +25,6 @@ import numpy as np
 from repro.checkpoint import CheckpointManager
 from repro.configs import EinetConfig, get_config, smoke_variant
 from repro.configs.base import ShapeSpec
-from repro.core.em import EMConfig, stochastic_em_update
 from repro.data import synthetic
 from repro.data.pipeline import ShardedLoader, lm_loader
 from repro.dist import fault_tolerance as ft
@@ -34,6 +33,34 @@ from repro.launch import cells as dr
 from repro.launch.mesh import dp_shards, make_mesh_for
 from repro.models import lm
 from repro.optim import adamw
+from repro.train import TrainConfig, make_em_step
+
+
+def einet_loader(
+    data: np.ndarray,
+    global_batch: int,
+    num_shards: int = 1,
+    shard_id: int = 0,
+    start_step: int = 0,
+) -> ShardedLoader:
+    """Deterministic EiNet loader: shard ``sh`` of step ``s`` reads the
+    contiguous row block ``[(s * num_shards + sh) * n, ...)`` (mod data), so
+    shards within a step are DISJOINT and steps tile the dataset.
+
+    (Regression guard: the pre-PR-3 inline lambda ignored its shard argument,
+    so every data-parallel shard trained on identical rows -- a silent
+    num_shards-times effective-batch shrink.  tests/test_train.py pins the
+    disjointness.)
+    """
+
+    def make(step: int, shard: int, n: int):
+        base = (step * num_shards + shard) * n
+        return {"x": data[(np.arange(n) + base) % len(data)]}
+
+    return ShardedLoader(
+        make, global_batch, num_shards=num_shards, shard_id=shard_id,
+        start_step=start_step,
+    )
 
 
 def main():
@@ -47,6 +74,11 @@ def main():
     ap.add_argument("--model-parallel", type=int, default=1)
     ap.add_argument("--ckpt-dir", default="artifacts/ckpt")
     ap.add_argument("--checkpoint-every", type=int, default=25)
+    ap.add_argument("--microbatches", type=int, default=1,
+                    help="EiNet: scan-accumulate E-step statistics over this "
+                         "many microbatches inside the compiled step")
+    ap.add_argument("--em-mode", choices=("stochastic", "full"),
+                    default="stochastic")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -65,12 +97,28 @@ def main():
                 4096, 16, max(d // 48, 1), 3, seed=0
             )[:, :d] if cfg.structure == "pd" else np.random.RandomState(0).randn(
                 4096, d).astype(np.float32)
-            loader = ShardedLoader(
-                lambda s, sh, n: {"x": data[(np.arange(n) + s * n) % len(data)]},
-                global_batch=args.batch * 32,
+            if jax.process_count() > 1:
+                # Disjoint per-process shards REQUIRE a cross-process
+                # statistics reduction in the step; wiring
+                # make_em_step(axis_names=...) into the multi-host launch is
+                # a ROADMAP open item.  Refuse loudly rather than silently
+                # diverging per host.
+                raise NotImplementedError(
+                    "multi-process EiNet training needs the distributed "
+                    "compiled EM step (ROADMAP: 'Distributed compiled EM')"
+                )
+            loader = einet_loader(
+                data, args.batch * 32,
+                num_shards=jax.process_count(), shard_id=jax.process_index(),
             )
-            step_jit = jax.jit(lambda p, b: stochastic_em_update(
-                model, p, b, EMConfig()))
+            # the whole EM update -- scan-accumulated E-step, M-step, blend --
+            # is ONE compiled program.  donate=False: ft.run_training's
+            # replay-from-init recovery path re-feeds the initial params when
+            # a failure precedes the first committed checkpoint, so the step
+            # must not consume them.
+            step_jit = make_em_step(model, TrainConfig(
+                mode=args.em_mode, num_microbatches=args.microbatches,
+                donate=False))
 
             def step_fn(state, batch):
                 p, ll = step_jit(state["params"], jnp.asarray(batch["x"]))

@@ -1,0 +1,19 @@
+"""Compiled EM training pipeline (the training-side twin of ``repro.serve``)."""
+
+from repro.train.pipeline import (
+    TrainConfig,
+    em_update_microbatched,
+    fit,
+    make_em_step,
+    microbatched_em_statistics,
+    stochastic_em_update_microbatched,
+)
+
+__all__ = [
+    "TrainConfig",
+    "em_update_microbatched",
+    "fit",
+    "make_em_step",
+    "microbatched_em_statistics",
+    "stochastic_em_update_microbatched",
+]

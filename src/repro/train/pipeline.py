@@ -1,0 +1,205 @@
+"""Compiled EM training pipeline: the training-side twin of ``repro.serve``.
+
+The paper's EM step is two phases -- an E-step that is one ``jax.grad`` call
+(§3.5) and a closed-form M-step -- but the *seed* hot path still ran them as
+separate dispatches, accumulated microbatch statistics in a Python loop, and
+never donated the old parameter buffers.  This module makes the whole update
+one compiled, donated-buffer XLA program:
+
+  * ``microbatched_em_statistics`` folds ``accumulate_statistics`` over the
+    microbatch axis with ``lax.scan`` (one compiled body, no per-microbatch
+    dispatch, no host round-trips) -- full-batch EM on datasets larger than
+    one device batch is a single program.
+  * ``em_update_microbatched`` / ``stochastic_em_update_microbatched`` fuse
+    scan-E-step + M-step (+ Sato blend) into one jittable function.
+  * ``make_em_step`` returns the jitted update with the parameter pytree
+    donated (the M-step writes a fresh pytree of identical shape, so the old
+    buffers are dead the moment statistics are read -- donation halves peak
+    parameter memory on TPU/GPU).
+
+With ``EiNet(impl="pallas")`` the E-step grad flows through the fused
+backward Pallas kernel (``repro.kernels``), making the entire update --
+forward, backward, accumulate, M-step -- a single fused program: the
+"compiled EM step" row of EXPERIMENTS.md §Perf, benchmarked by
+``benchmarks/bench_train.py``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.einet import EiNet
+from repro.core.em import (
+    EMConfig,
+    accumulate_statistics,
+    blend_params,
+    em_statistics,
+    m_step,
+    zeros_like_statistics,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    """Configuration for one compiled EM update step.
+
+    mode: "stochastic" (Sato online EM, the paper's minibatch training) or
+      "full" (exact M-step from the whole batch -- full-batch EM when the
+      batch is the dataset).
+    num_microbatches: split the batch into this many scan steps; bounds
+      activation memory at batch/num_microbatches rows while keeping the
+      statistics exact (they are sums over data).
+    donate: donate the old parameter buffers to the update.  None means
+      "donate where the backend implements it" (TPU/GPU); CPU donation is a
+      no-op that only produces warnings.  Donation deletes the input
+      buffers -- callers that re-feed the same params pytree (benchmarks
+      timing both paths, fault-tolerant loops that replay from the initial
+      state) must pass donate=False.
+    axis_names: mesh axes to psum statistics over (distributed E-step).
+    """
+
+    em: EMConfig = EMConfig()
+    mode: str = "stochastic"  # "stochastic" | "full"
+    num_microbatches: int = 1
+    donate: Optional[bool] = None
+    axis_names: Optional[Sequence[str]] = None
+
+
+def _split_microbatches(x: jax.Array, num_microbatches: int) -> jax.Array:
+    b = x.shape[0]
+    if b % num_microbatches:
+        raise ValueError(
+            f"batch {b} not divisible into {num_microbatches} microbatches"
+        )
+    return x.reshape((num_microbatches, b // num_microbatches) + x.shape[1:])
+
+
+def microbatched_em_statistics(
+    model: EiNet,
+    params: Dict[str, Any],
+    x: jax.Array,
+    num_microbatches: int = 1,
+    axis_names: Optional[Sequence[str]] = None,
+) -> Dict[str, Any]:
+    """E-step statistics for ``x``, accumulated over microbatches in a scan.
+
+    Bit-for-bit the same totals as the Python-loop
+    ``accumulate_statistics`` pattern (statistics are sums over data), but
+    compiled as ONE program: the scan body -- leaf pass, forward, backward,
+    statistic add -- is lowered once and XLA keeps the running accumulator
+    on-device across iterations.
+    """
+    if num_microbatches == 1:
+        return em_statistics(model, params, x, axis_names)
+    xm = _split_microbatches(x, num_microbatches)
+
+    def body(acc, xb):
+        # accumulate locally; the cross-shard psum runs ONCE on the totals
+        # below, not once per microbatch (statistics are plain sums, so the
+        # result is identical at 1/num_microbatches the collective traffic)
+        new = em_statistics(model, params, xb, axis_names=None)
+        return accumulate_statistics(acc, new), None
+
+    acc, _ = jax.lax.scan(body, zeros_like_statistics(model, params), xm)
+    if axis_names:
+        acc = jax.tree_util.tree_map(
+            lambda a: jax.lax.psum(a, axis_names), acc
+        )
+    return acc
+
+
+def em_update_microbatched(
+    model: EiNet,
+    params: Dict[str, Any],
+    x: jax.Array,
+    cfg: EMConfig = EMConfig(),
+    num_microbatches: int = 1,
+    axis_names: Optional[Sequence[str]] = None,
+) -> Tuple[Dict[str, Any], jax.Array]:
+    """One full EM update (monotone on the batch), microbatch-accumulated.
+
+    Returns (new_params, mean log-likelihood).
+    """
+    stats = microbatched_em_statistics(
+        model, params, x, num_microbatches, axis_names
+    )
+    new = m_step(model, stats, cfg)
+    return new, stats["ll"] / stats["count"]
+
+
+def stochastic_em_update_microbatched(
+    model: EiNet,
+    params: Dict[str, Any],
+    x: jax.Array,
+    cfg: EMConfig = EMConfig(),
+    num_microbatches: int = 1,
+    axis_names: Optional[Sequence[str]] = None,
+) -> Tuple[Dict[str, Any], jax.Array]:
+    """Sato online EM (Eqs. 8/9) with microbatch-accumulated statistics."""
+    mini, ll = em_update_microbatched(
+        model, params, x, cfg, num_microbatches, axis_names
+    )
+    return blend_params(model, params, mini, cfg.step_size), ll
+
+
+def _resolve_donate(donate: Optional[bool]) -> bool:
+    if donate is None:
+        return jax.default_backend() in ("tpu", "gpu")
+    return bool(donate)
+
+
+def make_em_step(
+    model: EiNet,
+    cfg: TrainConfig = TrainConfig(),
+) -> Callable[[Dict[str, Any], jax.Array], Tuple[Dict[str, Any], jax.Array]]:
+    """Build the jitted, donated-buffer EM update: (params, x) -> (params, ll).
+
+    The returned callable is the training hot path: one XLA program per
+    (param, batch) shape, old parameter buffers donated to the new ones.
+    """
+    if cfg.mode not in ("stochastic", "full"):
+        raise ValueError(f"unknown mode {cfg.mode!r}; 'stochastic' or 'full'")
+    update = (
+        stochastic_em_update_microbatched
+        if cfg.mode == "stochastic"
+        else em_update_microbatched
+    )
+
+    def step(params, x):
+        return update(
+            model, params, x, cfg.em, cfg.num_microbatches, cfg.axis_names
+        )
+
+    donate = (0,) if _resolve_donate(cfg.donate) else ()
+    return jax.jit(step, donate_argnums=donate)
+
+
+def fit(
+    model: EiNet,
+    params: Dict[str, Any],
+    batches: Any,
+    cfg: TrainConfig = TrainConfig(),
+    num_steps: Optional[int] = None,
+    on_step: Optional[Callable[[int, float], None]] = None,
+) -> Tuple[Dict[str, Any], list]:
+    """Convenience driver: run the compiled step over an iterable of batches.
+
+    ``batches`` yields (B, D) arrays (or dicts with an "x" key).  Returns
+    (final_params, per-step mean-LL list).  For the production loop with
+    checkpoint-restart and sharded loaders, use ``repro.launch.train``.
+    """
+    step_fn = make_em_step(model, cfg)
+    lls: list = []
+    for i, batch in enumerate(batches):
+        if num_steps is not None and i >= num_steps:
+            break
+        x = batch["x"] if isinstance(batch, dict) else batch
+        params, ll = step_fn(params, jnp.asarray(x))
+        lls.append(float(ll))
+        if on_step is not None:
+            on_step(i, lls[-1])
+    return params, lls

@@ -6,9 +6,13 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
+from repro.core.layers import NEG_INF
 from repro.kernels import ops
 from repro.kernels.flash_attention import flash_attention_pallas
-from repro.kernels.log_einsum_exp import log_einsum_exp_pallas
+from repro.kernels.log_einsum_exp import (
+    log_einsum_exp_bwd_pallas,
+    log_einsum_exp_pallas,
+)
 from repro.kernels.ref import log_einsum_exp_ref, mha_ref
 
 
@@ -50,7 +54,7 @@ def test_log_einsum_exp_wrapper_pads_odd_k(b, l, k, ko):
     wrapper padding (regression: the kernel docstring promised padding that
     ``ops.py`` never implemented -- odd K would fail to compile on real TPU)."""
     w, lnl, lnr = _random_lee(jax.random.PRNGKey(10 * k + ko), b, l, k, ko)
-    wp, lp, rp = ops._pad_for_lanes(w, lnl, lnr)
+    wp, lp, rp = ops.pad_for_lanes(w, lnl, lnr)
     assert (wp.shape[2] ** 2) % 128 == 0, "K^2 must land on a 128 lane multiple"
     assert wp.shape[1] % 128 == 0, "K_out must land on a 128 lane multiple"
     assert lp.shape == rp.shape == (b, l, wp.shape[2])
@@ -71,6 +75,139 @@ def test_log_einsum_exp_custom_vjp():
     for a, b in zip(gk, gr):
         rel = np.abs(np.asarray(a) - np.asarray(b)) / (np.abs(np.asarray(b)) + 1e-2)
         assert rel.max() < 1e-3
+
+
+def test_em_statistics_through_pallas_impl_match_xla():
+    """Paper §3.5 end-to-end: the E-step is one grad over the circuit, so the
+    fused backward kernel must reproduce the XLA impl's EM statistics."""
+    from repro.core import EiNet, Normal, em_statistics, random_binary_trees
+
+    g = random_binary_trees(8, 2, 2, seed=0)
+    net_p = EiNet(g, num_sums=3, exponential_family=Normal(), impl="pallas")
+    net_x = EiNet(g, num_sums=3, exponential_family=Normal(), impl="xla")
+    params = net_p.init(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (12, 8))
+    sp = em_statistics(net_p, params, x)
+    sx = em_statistics(net_x, params, x)
+    for a, b in zip(
+        jax.tree_util.tree_leaves(sp), jax.tree_util.tree_leaves(sx)
+    ):
+        a, b = np.asarray(a), np.asarray(b)
+        assert np.isfinite(a).all()
+        if a.size:
+            np.testing.assert_allclose(a, b, atol=1e-4)
+
+
+# ------------------------------------------------------- fused backward kernel
+@pytest.mark.parametrize(
+    "b,l,k,ko",
+    [(1, 1, 1, 1), (4, 3, 5, 5), (7, 2, 8, 1), (130, 4, 16, 16),
+     (16, 1, 40, 40), (33, 7, 13, 9), (5, 3, 5, 3), (9, 1, 17, 1)],
+)
+def test_log_einsum_exp_grad_parity(b, l, k, ko):
+    """Fused-backward Pallas VJP vs the pure-XLA autodiff path, across the
+    shape sweep INCLUDING odd-K lane-padded cases (the padding path used to be
+    forward-only tested).  Acceptance bound: <= 1e-4 max abs error on the
+    EM-normalized (mean) loss."""
+    w, lnl, lnr = _random_lee(jax.random.PRNGKey(b * 100 + l + ko), b, l, k, ko)
+    gk = jax.grad(lambda *a: ops.log_einsum_exp(*a).mean(), argnums=(0, 1, 2))(
+        w, lnl, lnr
+    )
+    gr = jax.grad(lambda *a: log_einsum_exp_ref(*a).mean(), argnums=(0, 1, 2))(
+        w, lnl, lnr
+    )
+    for a, ref in zip(gk, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(ref), atol=1e-4)
+
+
+def test_log_einsum_exp_bwd_pallas_accumulates_batch_tiles():
+    """dW is accumulated by revisiting the same output block across batch
+    tiles; force several tiles (plus a ragged final tile) and check against
+    the einsum oracle."""
+    b, l, k, ko = 70, 2, 8, 4
+    w, lnl, lnr = _random_lee(jax.random.PRNGKey(3), b, l, k, ko, scale=5.0)
+    wp, lp, rp, gp = ops.pad_for_lanes(
+        w, lnl, lnr, jnp.ones((b, l, ko)) / (b * l * ko)
+    )
+    gw, gl, gr = log_einsum_exp_bwd_pallas(wp, lp, rp, gp, block_b=32,
+                                           interpret=True)
+    ref = jax.grad(
+        lambda *a: log_einsum_exp_ref(*a).mean(), argnums=(0, 1, 2)
+    )(w, lnl, lnr)
+    np.testing.assert_allclose(np.asarray(gw[:, :ko, :k, :k]),
+                               np.asarray(ref[0]), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(gl[..., :k]), np.asarray(ref[1]),
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(gr[..., :k]), np.asarray(ref[2]),
+                               atol=1e-5)
+
+
+def test_grad_zero_on_padded_lanes():
+    """The padding contract must hold in the backward too: -inf padded ln
+    lanes and zero padded weights get identically-zero gradients."""
+    b, l, k, ko = 6, 2, 5, 3  # pads K 5 -> 16, K_out 3 -> 128
+    w, lnl, lnr = _random_lee(jax.random.PRNGKey(9), b, l, k, ko, scale=3.0)
+    wp, lp, rp, gp = ops.pad_for_lanes(
+        w, lnl, lnr, jnp.ones((b, l, ko)) / (b * l * ko)
+    )
+    gw, gl, gr = log_einsum_exp_bwd_pallas(wp, lp, rp, gp, interpret=True)
+    gw, gl, gr = map(np.asarray, (gw, gl, gr))
+    assert (gw[:, ko:, :, :] == 0).all() and (gw[:, :, k:, :] == 0).all()
+    assert (gw[:, :, :, k:] == 0).all()
+    assert (gl[..., k:] == 0).all() and (gr[..., k:] == 0).all()
+    assert np.isfinite(gw).all() and np.isfinite(gl).all()
+
+
+def test_grad_neg_inf_vs_minus_inf_padding_conventions():
+    """Entries at NEG_INF (the masked-row convention, exp -> 1 in the clamped
+    frame) and at -inf (the lane-padding convention, exp -> 0) must both give
+    finite gradients that match the XLA autodiff path."""
+    b, l, k, ko = 8, 2, 6, 4
+    w, lnl, lnr = _random_lee(jax.random.PRNGKey(5), b, l, k, ko, scale=2.0)
+    lnl = lnl.at[0, 0, :].set(NEG_INF)        # fully-masked row
+    lnl = lnl.at[1, 0, :3].set(-jnp.inf)      # partially -inf row
+    lnr = lnr.at[2, 1, :].set(NEG_INF)
+    gk = jax.grad(lambda *a: ops.log_einsum_exp(*a).mean(), argnums=(0, 1, 2))(
+        w, lnl, lnr
+    )
+    gr = jax.grad(lambda *a: log_einsum_exp_ref(*a).mean(), argnums=(0, 1, 2))(
+        w, lnl, lnr
+    )
+    for a, ref in zip(gk, gr):
+        a, ref = np.asarray(a), np.asarray(ref)
+        assert np.isfinite(a).all()
+        mask = np.isfinite(ref)  # ref autodiff may NaN where it divides 0/0
+        np.testing.assert_allclose(a[mask], ref[mask], atol=1e-4)
+
+
+def test_grad_finite_on_rows_saturated_below_neg_inf():
+    """Regression (PR 3 bugfix): the old einsum backward reconstructed
+    ``s = exp(out - a - a')`` WITHOUT the forward's NEG_INF clamp on the row
+    maxes, so rows saturated below NEG_INF were rebuilt in a different
+    stabilized frame -> inf/NaN gradients.  The fused backward clamps
+    identically and recomputes s in the forward's exact frame: gradients of
+    saturated rows must come out finite (and exactly zero -- the row
+    contributes log 0 regardless of any parameter)."""
+    b, l, k, ko = 6, 2, 4, 4
+    w, lnl, lnr = _random_lee(jax.random.PRNGKey(11), b, l, k, ko, scale=1.0)
+    lnl = lnl.at[1, 0, :].set(2.0 * NEG_INF)   # saturated BELOW the clamp
+    lnl = lnl.at[3, 1, :].set(4.0 * NEG_INF)
+    gk = jax.grad(lambda *a: ops.log_einsum_exp(*a).mean(), argnums=(0, 1, 2))(
+        w, lnl, lnr
+    )
+    for a in gk:
+        assert np.isfinite(np.asarray(a)).all()
+    # the saturated rows' input-gradients are exactly zero
+    assert (np.asarray(gk[1])[1, 0] == 0).all()
+    assert (np.asarray(gk[1])[3, 1] == 0).all()
+    # unaffected rows still match the XLA path
+    gr = jax.grad(lambda *a: log_einsum_exp_ref(*a).mean(), argnums=(0, 1, 2))(
+        w, lnl, lnr
+    )
+    ref1 = np.asarray(gr[1])
+    ok = np.ones((b, l), dtype=bool)
+    ok[1, 0] = ok[3, 1] = False
+    np.testing.assert_allclose(np.asarray(gk[1])[ok], ref1[ok], atol=1e-4)
 
 
 @given(
