@@ -68,6 +68,19 @@ def bench_summary() -> str:
             f"x{r.get('speedup_vs_jitted', 0):.1f} vs a fully-jitted "
             f"per-request baseline; parity {r.get('parity_max_abs_diff')}."
         )
+    if os.path.isfile("BENCH_eval.json"):
+        r = json.load(open("BENCH_eval.json"))
+        parity = ("0 mismatches" if r.get("parity_ok")
+                  else f"{r.get('parity_mismatches')} MISMATCHES")
+        parts.append(
+            f"**Evaluation** (`BENCH_eval.json`, {r.get('arch')}): held-out "
+            f"LL through the serving engine at "
+            f"{r.get('engine_rows_per_s', 0):.0f} rows/s vs "
+            f"{r.get('direct_rows_per_s', 0):.0f} rows/s for the dense "
+            f"engine-free loop (x{r.get('engine_vs_direct', 0):.2f}); "
+            f"inpainting {r.get('inpaint_requests_per_s', 0):.0f} req/s; "
+            f"engine-vs-direct parity {parity}."
+        )
     if os.path.isfile("BENCH_train.json"):
         r = json.load(open("BENCH_train.json"))
         rows = ["| arch | batch (microbatches) | compiled ms/step | "
@@ -87,6 +100,57 @@ def bench_summary() -> str:
     return "\n\n".join(parts) if parts else _MISSING
 
 
+def _eval_records(root: str):
+    """Per-run metrics JSONs under ``root``.  Deliberately NOT imported from
+    repro.eval.grids: that would pull jax + the serve/train stack into this
+    dependency-light generator, breaking its degrade-gracefully contract on
+    hosts without them."""
+    records = []
+    if not os.path.isdir(root):
+        return records
+    for run in sorted(os.listdir(root)):
+        p = os.path.join(root, run, "metrics.json")
+        if os.path.isfile(p):
+            records.append(json.load(open(p)))
+    return records
+
+
+def eval_summary(root: str = "artifacts/eval") -> str:
+    """The Fig. 4 section: one block per eval-workbench run
+    (``repro.launch.eval`` writes ``artifacts/eval/<run>/metrics.json``)."""
+    records = _eval_records(root)
+    if not records:
+        return ("_no eval runs on this host — run "
+                "`PYTHONPATH=src python -m repro.launch.eval "
+                "--dataset synthetic --smoke` first._")
+    parts = []
+    for r in records:
+        bj = r.get("bpd_joint", {})
+        bm = r.get("bpd_marginal", {})
+        rows = ["| mask | sample MSE | MPE MSE | mean-fill MSE |",
+                "|" + "---|" * 4]
+        for mk, m in r.get("inpainting", {}).get("per_mask", {}).items():
+            mf = m.get("mean_fill_mse")
+            rows.append(
+                f"| {mk} | {m.get('conditional_sample_mse', 0):.4f} | "
+                f"{m.get('mpe_mse', 0):.4f} | "
+                f"{'—' if mf is None else f'{mf:.4f}'} |"
+            )
+        parts.append(
+            f"**{r.get('run_name')}** — {r.get('dataset')} "
+            f"({r.get('dataset_source')}), "
+            f"{r.get('height')}x{r.get('width')}x{r.get('channels')}, "
+            f"{r.get('num_params', 0):,} params, {r.get('train_steps')} EM "
+            f"steps; test bpd {bj.get('bpd', 0):.4f} "
+            f"({bj.get('num_rows')} rows at "
+            f"{bj.get('engine_rows_per_s', 0):.0f} rows/s through the "
+            f"engine), marginal bpd ({bm.get('mask')}) "
+            f"{bm.get('bpd', 0):.4f}; engine-vs-direct parity mismatches "
+            f"{r.get('parity_mismatches_total')}.\n\n" + "\n".join(rows)
+        )
+    return "\n\n".join(parts)
+
+
 def main():
     base = roofline_summary("artifacts/dryrun_baseline", "16x16")
     opt_dir = "artifacts/dryrun_opt" if os.path.isdir("artifacts/dryrun_opt") \
@@ -102,6 +166,7 @@ def main():
     out = out.replace("{{ROOFLINE_BASELINE}}", base)
     out = out.replace("{{ROOFLINE_OPT}}", opt)
     out = out.replace("{{BENCHES}}", bench_summary())
+    out = out.replace("{{EVAL}}", eval_summary())
     out = out.replace("{{PERF_LOG}}", perf)
     with open("EXPERIMENTS.md", "w") as f:
         f.write(out)

@@ -22,10 +22,26 @@ import numpy as np
 from repro.checkpoint import CheckpointManager
 from repro.core import EiNet, Normal, random_binary_trees
 from repro.core.em import EMConfig
+from repro.data import datasets as ds_lib
 from repro.data.pipeline import ShardedLoader
 from repro.data.synthetic import gaussian_mixture_images
 from repro.dist import fault_tolerance as ft
 from repro.train import TrainConfig, make_em_step
+
+
+def resolve_data(args) -> np.ndarray:
+    """(N, D) float32 training rows for --dataset (real data falls back to
+    the deterministic procedural generator on offline hosts)."""
+    if args.dataset == "synthetic":
+        return gaussian_mixture_images(8192, 16, 16, 3, seed=1)
+    try:
+        ds = ds_lib.load_image_dataset(args.dataset)
+    except ds_lib.DatasetUnavailable as e:
+        print(f"{e}; using the procedural fallback")
+        ds = ds_lib.load_image_dataset(args.dataset, source="procedural")
+    print(f"dataset {args.dataset} ({ds.source}): {len(ds.train_x)} rows")
+    data, _ = ds_lib.to_domain(ds.train_x, "normal")
+    return data
 
 
 def main():
@@ -33,20 +49,20 @@ def main():
     ap.add_argument("--steps", type=int, default=200)
     ap.add_argument("--batch", type=int, default=256)
     ap.add_argument("--num-sums", type=int, default=16)
+    ap.add_argument("--dataset", choices=("synthetic", "mnist", "svhn"),
+                    default="synthetic")
     ap.add_argument("--kill-at", type=int, default=None)
     ap.add_argument("--ckpt-dir", default=None)
     args = ap.parse_args()
 
-    h = w = 16
-    d = h * w * 3
+    data = resolve_data(args)
+    d = data.shape[1]
     graph = random_binary_trees(d, depth=5, num_repetitions=8, seed=0)
     net = EiNet(graph, num_sums=args.num_sums,
                 exponential_family=Normal(min_var=1e-6, max_var=1e-2))
     params = net.init(jax.random.PRNGKey(0))
     print(f"model: {net.num_params(params):,} parameters, "
           f"{len(net.pair_specs)} einsum layers")
-
-    data = gaussian_mixture_images(8192, h, w, 3, seed=1)
 
     def make_batch(step, shard, n):
         idx = (np.arange(n) + step * n + shard * 10_007) % len(data)

@@ -12,6 +12,7 @@ from repro.configs.base import (
 
 from repro.configs import (
     einet_pd,
+    einet_pd_mnist,
     einet_rat,
     einet_rat_large,
     granite_8b,
@@ -40,6 +41,7 @@ REGISTRY = {
         qwen1_5_0_5b,
         internvl2_26b,
         einet_pd,
+        einet_pd_mnist,
         einet_rat,
         einet_rat_large,
     )
@@ -58,6 +60,7 @@ ALIASES = {
     "qwen1.5-0.5b": "qwen1.5-0.5b",
     "internvl2-26b": "internvl2-26b",
     "einet_pd": "einet-pd-svhn",
+    "einet_pd_mnist": "einet-pd-mnist",
     "einet_rat": "einet-rat",
     "einet_rat_large": "einet-rat-large",
 }

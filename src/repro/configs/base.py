@@ -146,7 +146,10 @@ class EinetConfig:
     # shared
     num_sums: int = 40
     num_classes: int = 1
-    exponential_family: str = "normal"
+    exponential_family: str = "normal"  # normal | binomial | categorical
+    # normal-leaf variance clamp; the paper uses [1e-6, 1e-2] for images
+    min_var: float = 1e-6
+    max_var: float = 10.0
     batch_size: int = 512
 
 

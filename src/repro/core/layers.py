@@ -54,6 +54,26 @@ def log_einsum_exp(w: jax.Array, ln_left: jax.Array, ln_right: jax.Array,
     return a + ap + jnp.log(s)
 
 
+# Floor for the stabilized sum when dividing the backward cotangent: must be
+# a NORMAL float32 (XLA flushes subnormals to zero -- a 1e-38 floor becomes
+# g / 0 = inf on fully-saturated rows).  Same contract as the fused
+# log-einsum-exp backward kernel (kernels/log_einsum_exp.py).
+_S_FLOOR = 1e-30
+
+
+def _log_mix_exp_frame(v, ln, mask):
+    """The mixing layer's stabilized frame: (masked ln, clamped max, exp'd
+    inputs, stabilized sum).  Shared bit-exactly by the forward and the
+    custom backward, which recomputes it from the residuals instead of
+    letting XLA autodiff save/reconstruct intermediates."""
+    lnm = jnp.where(mask[None, :, :, None] > 0, ln, NEG_INF)
+    a = jnp.maximum(jnp.max(lnm, axis=2, keepdims=True), NEG_INF)  # (B,M,1,K)
+    e = jnp.exp(lnm - a)  # (B, M, C, K)
+    s = jnp.sum(v[None] * e, axis=2)  # (B, M, K)
+    return a, e, s
+
+
+@jax.custom_vjp
 def log_mix_exp(v: jax.Array, ln: jax.Array, mask: jax.Array) -> jax.Array:
     """Mixing layer (Appendix B): element-wise mixtures over C children.
 
@@ -65,12 +85,49 @@ def log_mix_exp(v: jax.Array, ln: jax.Array, mask: jax.Array) -> jax.Array:
 
     Returns:
       (B, M, K) log-densities  log sum_c v[m,c,k] exp(ln[b,m,c,k]).
+
+    Carries a fused custom VJP (the last op of the EM update off the XLA
+    autodiff path): the backward recomputes the forward's stabilized frame
+    from the (v, ln, mask) residuals -- same residual-recompute contract as
+    the fused ``log_einsum_exp`` backward -- and emits both gradients
+
+        dv[m,c,k]    = sum_b g[b,m,k] exp(ln[b,m,c,k] - a) / s
+        dln[b,m,c,k] = g[b,m,k] v[m,c,k] exp(ln[b,m,c,k] - a) / s
+
+    in one pass, with padded children explicitly zeroed (on fully
+    marginalized NEG_INF rows ``exp(ln - a) = 1`` even where mask == 0, so
+    masking the gradient is load-bearing, not cosmetic).
     """
-    ln = jnp.where(mask[None, :, :, None] > 0, ln, NEG_INF)
-    a = jnp.max(ln, axis=2, keepdims=True)  # (B, M, 1, K)
-    a = jnp.maximum(a, NEG_INF)
-    s = jnp.sum(v[None] * jnp.exp(ln - a), axis=2)
+    a, _, s = _log_mix_exp_frame(v, ln, mask)
     return a[:, :, 0, :] + jnp.log(s)
+
+
+def log_mix_exp_ref(v: jax.Array, ln: jax.Array, mask: jax.Array) -> jax.Array:
+    """The pure-XLA-autodiff reference (identical forward values): the grad
+    parity oracle for the fused VJP (tests/test_kernels.py)."""
+    a, _, s = _log_mix_exp_frame(v, ln, mask)
+    return a[:, :, 0, :] + jnp.log(s)
+
+
+def _lme_fwd(v, ln, mask):
+    # residuals are the unpadded primals; the backward re-derives the frame
+    # bit-exactly (cheap: one max + one exp sweep) so no forward
+    # intermediate -- and no log -- needs to live in residual memory
+    return log_mix_exp(v, ln, mask), (v, ln, mask)
+
+
+def _lme_bwd(res, g):
+    v, ln, mask = res
+    _, e, s = _log_mix_exp_frame(v, ln, mask)
+    ginv = g / jnp.maximum(s, _S_FLOOR)  # (B, M, K)
+    gmask = mask[None, :, :, None]
+    ge = ginv[:, :, None, :] * e * gmask  # (B, M, C, K), padding zeroed
+    gv = jnp.sum(ge, axis=0)  # (M, C, K)
+    gln = ge * v[None]
+    return gv, gln, jnp.zeros_like(mask)
+
+
+log_mix_exp.defvjp(_lme_fwd, _lme_bwd)
 
 
 def normalize_einsum_weights(w: jax.Array, floor: float = 1e-12) -> jax.Array:

@@ -1,5 +1,6 @@
-"""Data substrate: synthetic dataset generators + sharded host pipeline."""
+"""Data substrate: synthetic generators, real-image datasets (MNIST/SVHN +
+procedural offline fallback), and the sharded host pipeline."""
 
-from repro.data import pipeline, synthetic
+from repro.data import datasets, pipeline, synthetic
 
-__all__ = ["pipeline", "synthetic"]
+__all__ = ["datasets", "pipeline", "synthetic"]

@@ -10,6 +10,7 @@ checkable.  Documented in DESIGN.md §6.
 
 from __future__ import annotations
 
+import zlib
 from typing import Dict, Tuple
 
 import numpy as np
@@ -37,7 +38,9 @@ def binary_dataset(
     d = dims.get(name)
     if d is None:
         raise KeyError(f"unknown dataset {name}; one of {list(dims)}")
-    rng = np.random.RandomState(hash(name) % 2**31 + seed)
+    # crc32, not hash(): str hashes are salted per process, and these rows
+    # must be recomputable across restarts (the stateless-loader contract)
+    rng = np.random.RandomState((zlib.crc32(name.encode()) + seed) % 2**31)
     w = rng.randn(num_factors, d) * 2.0
     z = rng.randint(num_factors, size=num_samples)
     p = 1.0 / (1.0 + np.exp(-w[z]))

@@ -1,0 +1,93 @@
+"""Artifact writers: PNG image grids + per-run metrics JSON.
+
+Grids are plain row-major tilings (PIL, no matplotlib dependency at
+runtime): samples render as one grid, inpainting renders one grid per mask
+kind with rows [original / masked / conditional sample / MPE decode] -- the
+layout of the paper's Fig. 4.  Metrics JSONs land next to the PNGs under
+``artifacts/eval/<run>/`` and are ingested by
+``benchmarks/make_experiments_md.py`` into the EXPERIMENTS.md Fig. 4 section.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Optional, Sequence
+
+import numpy as np
+
+
+def _to_uint8(images: np.ndarray, vmax: float) -> np.ndarray:
+    """(N, H, W, C) floats in [0, vmax] -> uint8, clipped."""
+    return np.clip(images / vmax * 255.0, 0.0, 255.0).astype(np.uint8)
+
+
+def save_image_grid(
+    path: str,
+    images: np.ndarray,  # (N, H, W, C) float, domain [0, vmax]
+    columns: int = 8,
+    vmax: float = 1.0,
+    pad: int = 2,
+) -> str:
+    """Tile images into one PNG; returns the written path."""
+    from PIL import Image  # container ships Pillow
+
+    n, h, w, c = images.shape
+    cols = max(1, min(columns, n))
+    rows = -(-n // cols)
+    canvas = np.full(
+        (rows * (h + pad) + pad, cols * (w + pad) + pad, c), 32, np.uint8
+    )
+    tiles = _to_uint8(images, vmax)
+    for i in range(n):
+        r, col = divmod(i, cols)
+        y, x = pad + r * (h + pad), pad + col * (w + pad)
+        canvas[y: y + h, x: x + w] = tiles[i]
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    mode = "L" if c == 1 else "RGB"
+    Image.fromarray(canvas[..., 0] if c == 1 else canvas, mode).save(path)
+    return path
+
+
+def save_inpainting_grid(
+    path: str,
+    originals: np.ndarray,  # (N, D) domain floats
+    evidence_mask: np.ndarray,  # (D,) bool
+    conditional: np.ndarray,  # (N, D)
+    mpe: np.ndarray,  # (N, D)
+    height: int,
+    width: int,
+    channels: int,
+    vmax: float = 1.0,
+    columns: Optional[int] = None,
+) -> str:
+    """Fig. 4 layout: four rows per column block -- original, masked
+    (occluded pixels zeroed), conditional sample, MPE decode."""
+    n = len(originals)
+    masked = np.where(evidence_mask[None, :], originals, 0.0)
+    stack = np.concatenate([originals, masked, conditional, mpe])
+    imgs = stack.reshape(-1, height, width, channels)
+    return save_image_grid(path, imgs, columns=columns or n, vmax=vmax)
+
+
+def save_metrics_json(path: str, record: Dict[str, Any]) -> str:
+    """Atomic JSON write (tmp + rename), sorted keys for stable diffs."""
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(record, f, indent=2, sort_keys=True, default=float)
+    os.replace(tmp, path)
+    return path
+
+
+def load_eval_records(root: str = "artifacts/eval") -> Sequence[Dict[str, Any]]:
+    """All per-run metrics JSONs under ``root`` (for EXPERIMENTS.md)."""
+    records = []
+    if not os.path.isdir(root):
+        return records
+    for run in sorted(os.listdir(root)):
+        p = os.path.join(root, run, "metrics.json")
+        if os.path.isfile(p):
+            with open(p) as f:
+                records.append(json.load(f))
+    return records

@@ -1,0 +1,232 @@
+"""Held-out likelihood / bits-per-dim evaluation through the serving engine.
+
+The test split is streamed through ``repro.serve.ServeEngine`` as ordinary
+``joint_ll`` / ``marginal_ll`` requests -- evaluation is deliberately NOT a
+separate batched code path, it is *traffic*: the same coalescing, bucket
+padding and compiled-program cache that serve production queries also serve
+the benchmark, so the numbers in EXPERIMENTS.md measure the deployed path.
+
+Parity is counted against direct per-request ``EiNet.query`` calls (batch-1
+jitted programs): a *mismatch* is any request whose engine result is not
+bit-identical to the direct result.  Row-independent LL math and per-row
+PRNG keys make bit-identity the engine's contract (PR 2), so the eval
+harness inherits "exactly 0 mismatches" as its acceptance gate.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+import weakref
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.einet import EiNet
+from repro.serve import Request, ServeEngine
+
+LN2 = float(np.log(2.0))
+
+
+def bits_per_dim(mean_ll: float, num_dims: int, offset_bits: float = 0.0) -> float:
+    """nats of model log-likelihood -> bits-per-dim of the original data.
+
+    ``offset_bits`` is the per-dim change-of-variables term from the domain
+    transform (``repro.data.datasets.to_domain``): log2(256) for uint8 data
+    modelled as x/255 on [0, 1] by continuous leaves, 0 for discrete leaves.
+    """
+    return -float(mean_ll) / (num_dims * LN2) + float(offset_bits)
+
+
+@dataclasses.dataclass
+class EngineLLResult:
+    """Per-row log-likelihoods + parity/throughput accounting."""
+
+    ll: np.ndarray  # (N,) float32
+    kind: str
+    engine_seconds: float  # steady-state drain time (post warm-up)
+    warmup_seconds: float  # compile time paid once
+    parity_rows: int  # rows checked against direct EiNet.query
+    parity_mismatches: int  # rows NOT bit-identical to the direct call
+    parity_max_abs_diff: float
+
+    @property
+    def rows_per_second(self) -> float:
+        return len(self.ll) / max(self.engine_seconds, 1e-9)
+
+
+def _request_batch(model: EiNet, req: Request) -> Dict[str, Any]:
+    """The batch-1 ``EiNet.query`` input reproducing one engine request."""
+    from repro.serve.engine import _key_data
+
+    d = model.num_vars
+    zeros = np.zeros((1, d), np.float32)
+    fmask = np.zeros((1, d), bool)
+    return {
+        "x": zeros if req.x is None else np.asarray(req.x, np.float32)[None],
+        "evidence_mask": fmask if req.evidence_mask is None
+        else np.asarray(req.evidence_mask, bool)[None],
+        "query_mask": fmask if req.query_mask is None
+        else np.asarray(req.query_mask, bool)[None],
+        "keys": _key_data(req.seed)[None],
+    }
+
+
+# one jitted batch-1 query program per (model, kind): a fresh
+# jit(partial(...)) per call would retrace/recompile for EVERY audited
+# request (exhaustive parity passes issue hundreds).  WeakKey so models
+# don't leak; jax's own jit cache is keyed on the partial object identity,
+# hence this explicit dict.
+_DIRECT_FNS = weakref.WeakKeyDictionary()
+
+
+def _direct_fn(model: EiNet, kind: str):
+    per_model = _DIRECT_FNS.setdefault(model, {})
+    fn = per_model.get(kind)
+    if fn is None:
+        fn = jax.jit(functools.partial(model.query, kind=kind))
+        per_model[kind] = fn
+    return fn
+
+
+def direct_query(model: EiNet, params: Dict[str, Any], req: Request):
+    """Direct (engine-free) result for one request: the parity oracle."""
+    fn = _direct_fn(model, req.kind)
+    return np.asarray(fn(params, _request_batch(model, req)))[0]
+
+
+def parity_report(
+    model: EiNet,
+    params: Dict[str, Any],
+    requests,
+    results: Dict[int, Any],
+    rows: Optional[int] = None,
+) -> Dict[str, Any]:
+    """Count engine-vs-direct mismatches (bitwise) over ``rows`` requests."""
+    checked = mismatches = 0
+    max_diff = 0.0
+    for req in requests:
+        if rows is not None and checked >= rows:
+            break
+        ref = direct_query(model, params, req)
+        got = np.asarray(results[req.req_id].value)
+        checked += 1
+        if not np.array_equal(got, ref):
+            mismatches += 1
+            max_diff = max(max_diff, float(np.max(np.abs(got - ref))))
+    return {
+        "parity_rows": checked,
+        "parity_mismatches": mismatches,
+        "parity_max_abs_diff": max_diff,
+    }
+
+
+def engine_log_likelihoods(
+    model: EiNet,
+    params: Dict[str, Any],
+    x: np.ndarray,
+    kind: str = "joint_ll",
+    evidence_mask: Optional[np.ndarray] = None,
+    engine: Optional[ServeEngine] = None,
+    max_batch: int = 64,
+    parity_rows: Optional[int] = 64,
+) -> EngineLLResult:
+    """Stream ``x`` (N, D) through the engine as LL requests, in order.
+
+    ``evidence_mask`` (broadcastable to (N, D)) switches ``marginal_ll`` on a
+    shared or per-row mask.  ``parity_rows=None`` checks every row;
+    ``0`` skips the parity pass (pure-throughput benchmarking).
+    """
+    if kind not in ("joint_ll", "marginal_ll"):
+        raise ValueError(f"LL streaming supports joint/marginal, got {kind!r}")
+    n = len(x)
+    if engine is None:
+        engine = ServeEngine(model, params, max_batch=min(max_batch, max(n, 1)))
+    ev = None
+    if evidence_mask is not None:
+        ev = np.broadcast_to(np.asarray(evidence_mask, bool), x.shape)
+    reqs = [
+        Request(
+            req_id=i,
+            kind=kind,
+            x=np.asarray(x[i], np.float32),
+            evidence_mask=None if ev is None else ev[i],
+        )
+        for i in range(n)
+    ]
+    warmup = engine.warmup(kinds=[kind])
+    t0 = time.perf_counter()
+    results = engine.run(reqs)
+    engine_s = time.perf_counter() - t0
+    ll = np.array([float(results[i].value) for i in range(n)], np.float32)
+    par = {"parity_rows": 0, "parity_mismatches": 0, "parity_max_abs_diff": 0.0}
+    if parity_rows is None or parity_rows > 0:
+        par = parity_report(model, params, reqs, results, rows=parity_rows)
+    return EngineLLResult(
+        ll=ll, kind=kind, engine_seconds=engine_s, warmup_seconds=warmup, **par
+    )
+
+
+def direct_log_likelihoods(
+    model: EiNet,
+    params: Dict[str, Any],
+    x: np.ndarray,
+    kind: str = "joint_ll",
+    evidence_mask: Optional[np.ndarray] = None,
+    chunk: int = 256,
+) -> np.ndarray:
+    """The engine-free dense baseline: fixed-size jitted chunks of
+    ``EiNet.query`` (zero-padded tail), for throughput comparison in
+    ``benchmarks/bench_eval.py``."""
+    n, d = x.shape
+    chunk = min(chunk, n)
+    fn = _direct_fn(model, kind)  # cached: repeat calls must not recompile
+    ev = np.zeros((n, d), bool) if evidence_mask is None else \
+        np.broadcast_to(np.asarray(evidence_mask, bool), x.shape)
+    out = np.empty(n, np.float32)
+    fmask = np.zeros((chunk, d), bool)
+    keys = np.zeros((chunk, 2), np.uint32)
+    for i in range(0, n, chunk):
+        xs = np.zeros((chunk, d), np.float32)
+        es = np.zeros((chunk, d), bool)
+        m = min(chunk, n - i)
+        xs[:m] = x[i: i + m]
+        es[:m] = ev[i: i + m]
+        batch = {"x": xs, "evidence_mask": es, "query_mask": fmask,
+                 "keys": keys}
+        out[i: i + m] = np.asarray(fn(params, batch))[:m]
+    return out
+
+
+def evaluate_bpd(
+    model: EiNet,
+    params: Dict[str, Any],
+    x: np.ndarray,
+    offset_bits: float = 0.0,
+    engine: Optional[ServeEngine] = None,
+    max_batch: int = 64,
+    parity_rows: Optional[int] = 64,
+) -> Dict[str, Any]:
+    """Test-split bits-per-dim through the engine; returns a flat JSON-able
+    record (the EXPERIMENTS.md ingestion format)."""
+    res = engine_log_likelihoods(
+        model, params, x, kind="joint_ll", engine=engine, max_batch=max_batch,
+        parity_rows=parity_rows,
+    )
+    mean_ll = float(np.mean(res.ll))
+    return {
+        "num_rows": int(len(x)),
+        "num_dims": int(x.shape[1]),
+        "mean_ll": mean_ll,
+        "bpd": bits_per_dim(mean_ll, x.shape[1], offset_bits),
+        "bpd_offset_bits": float(offset_bits),
+        "engine_rows_per_s": res.rows_per_second,
+        "engine_seconds": res.engine_seconds,
+        "warmup_seconds": res.warmup_seconds,
+        "parity_rows": res.parity_rows,
+        "parity_mismatches": res.parity_mismatches,
+        "parity_max_abs_diff": res.parity_max_abs_diff,
+    }

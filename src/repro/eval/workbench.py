@@ -1,0 +1,246 @@
+"""End-to-end image-evaluation runs: the engine behind ``repro.launch.eval``.
+
+One :func:`run_eval` call is the repo's Fig. 4 / §4.2 protocol in miniature:
+
+  1. resolve the dataset (synthetic / MNIST / SVHN; ``--smoke`` and offline
+     hosts use the deterministic procedural fallback),
+  2. build a PD-structure EiNet matched to the image grid and leaf family,
+  3. train it with the compiled EM pipeline (``repro.train``),
+  4. stream the test split through the serving engine for bits-per-dim
+     (joint + marginal), run the Fig. 4 inpainting harness and a sample
+     grid -- every query through ``repro.serve``, parity-audited against
+     direct ``EiNet.query`` calls,
+  5. write PNG grids + a metrics JSON under ``artifacts/eval/<run>/``.
+
+The returned record is flat JSON; ``parity_mismatches_total`` is the
+acceptance gate (must be exactly 0).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.configs import EinetConfig
+from repro.core.einet import EiNet
+from repro.data import datasets as ds_lib
+from repro.eval import grids as grids_lib
+from repro.eval.inpainting import run_inpainting
+from repro.eval.masks import MASK_KINDS
+from repro.eval.metrics import (
+    bits_per_dim,
+    engine_log_likelihoods,
+    evaluate_bpd,
+    parity_report,
+)
+from repro.serve import Request, ServeEngine
+from repro.train import TrainConfig, fit
+
+EVAL_DATASETS = ("synthetic", "mnist", "svhn")
+
+
+@dataclasses.dataclass(frozen=True)
+class EvalConfig:
+    """One evaluation run.  ``smoke`` shrinks every knob to CI size and
+    forces the offline procedural dataset source."""
+
+    dataset: str = "synthetic"
+    family: str = "normal"  # leaf EF: normal | binomial | categorical
+    smoke: bool = False
+    steps: int = 80  # stochastic-EM training steps before eval
+    batch: int = 128
+    num_sums: int = 16
+    delta: Optional[int] = None  # PD grid coarseness (None = per-dataset)
+    data_dir: str = ds_lib.DEFAULT_DATA_DIR
+    source: str = "auto"  # auto | download | procedural
+    out_dir: str = "artifacts/eval"
+    run_name: Optional[str] = None
+    max_batch: int = 32  # engine micro-batch cap
+    eval_rows: int = 256  # test rows streamed for bpd
+    inpaint_rows: int = 8  # images per mask kind in the Fig. 4 harness
+    num_samples: int = 16
+    mask_kinds: Sequence[str] = MASK_KINDS
+    marginal_mask: str = "left_half"  # mask for the marginal-bpd record
+    seed: int = 0
+
+
+def resolve_dataset(cfg: EvalConfig) -> ds_lib.ImageDataset:
+    if cfg.dataset == "synthetic":
+        if cfg.smoke:
+            return ds_lib.synthetic_image_dataset(
+                8, 8, 1, num_train=512, num_test=96, seed=cfg.seed
+            )
+        return ds_lib.synthetic_image_dataset(16, 16, 3, seed=cfg.seed)
+    source = "procedural" if cfg.smoke else cfg.source
+    return ds_lib.load_image_dataset(
+        cfg.dataset, data_dir=cfg.data_dir, source=source,
+        size_cap=1024 if cfg.smoke else None,
+    )
+
+
+def pd_config_for(cfg: EvalConfig, spec: ds_lib.ImageSpec) -> EinetConfig:
+    """The PD image-grid config for this dataset's geometry (28x28 MNIST,
+    32x32 SVHN, or the synthetic grid), shrunk under ``--smoke``."""
+    delta = cfg.delta
+    if delta is None:
+        delta = {"mnist": 7, "svhn": 8}.get(spec.name, max(spec.height // 4, 2))
+    if cfg.smoke:
+        delta = max(delta, spec.height // 2)
+    return EinetConfig(
+        name=f"einet-pd-{spec.name}-eval",
+        structure="pd",
+        height=spec.height,
+        width=spec.width,
+        num_channels=spec.channels,
+        delta=delta,
+        pd_axes=("w",),
+        num_sums=4 if cfg.smoke else cfg.num_sums,
+        exponential_family=cfg.family,
+        min_var=1e-6,
+        max_var=1e-2,  # the paper's image-leaf variance clamp
+        batch_size=cfg.batch,
+    )
+
+
+def _train(
+    model: EiNet, cfg: EvalConfig, train_x: np.ndarray
+) -> Tuple[Dict[str, Any], list]:
+    params = model.init(jax.random.PRNGKey(cfg.seed))
+    steps = min(cfg.steps, 25) if cfg.smoke else cfg.steps
+    batch = min(cfg.batch, len(train_x))
+    loader = ds_lib.array_loader(train_x, batch)
+    return fit(model, params, loader, TrainConfig(donate=False),
+               num_steps=steps)
+
+
+def _sample_grid(
+    model: EiNet,
+    params: Dict[str, Any],
+    engine: ServeEngine,
+    cfg: EvalConfig,
+) -> Tuple[np.ndarray, Dict[str, Any]]:
+    """Unconditional samples through the engine + parity record."""
+    reqs = [
+        Request(req_id=i, kind="sample", seed=7_000_000 + cfg.seed * 10_007 + i)
+        for i in range(cfg.num_samples)
+    ]
+    engine.warmup(kinds=["sample"])
+    results = engine.run(reqs)
+    samples = np.stack([results[i].value for i in range(cfg.num_samples)])
+    par = parity_report(model, params, reqs, results, rows=None)
+    return samples, par
+
+
+def run_eval(cfg: EvalConfig, model: Optional[EiNet] = None,
+             params: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
+    """The full workbench run; pass (model, params) to skip training and
+    evaluate an existing net (it must match the dataset geometry)."""
+    if cfg.dataset not in EVAL_DATASETS:
+        raise KeyError(
+            f"unknown eval dataset {cfg.dataset!r}; one of {EVAL_DATASETS}"
+        )
+    t_start = time.perf_counter()
+    dataset = resolve_dataset(cfg)
+    spec = dataset.spec
+    train_x, _ = ds_lib.to_domain(dataset.train_x, cfg.family)
+    test_x, offset_bits = ds_lib.to_domain(dataset.test_x, cfg.family)
+    vmax = 1.0 if cfg.family == "normal" else 255.0
+
+    lls: list = []
+    if model is None:
+        from repro.launch.cells import build_einet
+
+        model = build_einet(pd_config_for(cfg, spec))
+        params, lls = _train(model, cfg, train_x)
+    assert model.num_vars == spec.num_dims, (
+        f"model covers {model.num_vars} vars, dataset has {spec.num_dims}"
+    )
+
+    engine = ServeEngine(model, params, max_batch=cfg.max_batch)
+
+    # -- bits per dim: joint on the test split, marginal under one mask ----
+    eval_x = test_x[: cfg.eval_rows]
+    bpd_joint = evaluate_bpd(
+        model, params, eval_x, offset_bits=offset_bits, engine=engine,
+        parity_rows=None if cfg.smoke else 64,
+    )
+    from repro.eval.masks import make_mask
+
+    marg_ev = make_mask(cfg.marginal_mask, spec.height, spec.width,
+                        spec.channels, seed=cfg.seed)
+    marg = engine_log_likelihoods(
+        model, params, eval_x, kind="marginal_ll", evidence_mask=marg_ev,
+        engine=engine, parity_rows=None if cfg.smoke else 64,
+    )
+    n_ev = int(np.sum(marg_ev))
+    bpd_marginal = bits_per_dim(float(np.mean(marg.ll)), n_ev, offset_bits)
+
+    # -- Fig. 4 inpainting + sample grid (exhaustively parity-audited) ----
+    inp = run_inpainting(
+        model, params, test_x[: cfg.inpaint_rows], spec.height, spec.width,
+        spec.channels, mask_kinds=cfg.mask_kinds,
+        mean_fill=train_x.mean(axis=0), engine=engine, seed=cfg.seed,
+        parity_rows=None,
+    )
+    samples, sample_par = _sample_grid(model, params, engine, cfg)
+
+    # -- artifacts --------------------------------------------------------
+    run_name = cfg.run_name or (
+        f"{spec.name}_{cfg.family}" + ("_smoke" if cfg.smoke else "")
+    )
+    out = f"{cfg.out_dir}/{run_name}"
+    pngs = {
+        "samples": grids_lib.save_image_grid(
+            f"{out}/samples.png",
+            samples.reshape(-1, spec.height, spec.width, spec.channels),
+            vmax=vmax,
+        )
+    }
+    for mk in cfg.mask_kinds:
+        pngs[f"inpaint_{mk}"] = grids_lib.save_inpainting_grid(
+            f"{out}/inpaint_{mk}.png",
+            test_x[: cfg.inpaint_rows], inp.evidence_masks[mk],
+            inp.recon(mk, "conditional_sample"), inp.recon(mk, "mpe"),
+            spec.height, spec.width, spec.channels, vmax=vmax,
+        )
+
+    mismatches = (
+        bpd_joint["parity_mismatches"] + marg.parity_mismatches
+        + inp.metrics["parity_mismatches"] + sample_par["parity_mismatches"]
+    )
+    record = {
+        "run_name": run_name,
+        "dataset": spec.name,
+        "dataset_source": dataset.source,
+        "family": cfg.family,
+        "smoke": cfg.smoke,
+        "height": spec.height,
+        "width": spec.width,
+        "channels": spec.channels,
+        "num_dims": spec.num_dims,
+        "num_params": model.num_params(params),
+        "train_steps": len(lls),
+        "train_ll_first": float(lls[0]) if lls else None,
+        "train_ll_last": float(lls[-1]) if lls else None,
+        "bpd_joint": bpd_joint,
+        "bpd_marginal": {
+            "mask": cfg.marginal_mask,
+            "evidence_dims": n_ev,
+            "mean_ll": float(np.mean(marg.ll)),
+            "bpd": bpd_marginal,
+            "parity_mismatches": marg.parity_mismatches,
+        },
+        "inpainting": inp.metrics,
+        "samples_parity_mismatches": sample_par["parity_mismatches"],
+        "parity_mismatches_total": int(mismatches),
+        "engine_programs": engine.num_programs,
+        "engine_stats": dict(engine.stats),
+        "artifacts": pngs,
+        "wall_seconds": time.perf_counter() - t_start,
+    }
+    grids_lib.save_metrics_json(f"{out}/metrics.json", record)
+    return record

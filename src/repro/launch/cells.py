@@ -16,6 +16,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import EinetConfig, ModelConfig
 from repro.core import EiNet, Normal, poon_domingos, random_binary_trees
+from repro.core.exponential_family import make_exponential_family
 from repro.core.em import EMConfig, stochastic_em_update
 from repro.dist import sharding as shlib
 from repro.launch.mesh import dp_shards
@@ -171,8 +172,19 @@ def build_einet(cfg: EinetConfig) -> EiNet:
         )
     else:
         graph = random_binary_trees(cfg.num_vars, cfg.depth, cfg.num_repetitions)
+    if cfg.exponential_family == "normal":
+        ef = Normal(min_var=cfg.min_var, max_var=cfg.max_var)
+    elif cfg.exponential_family == "binomial":
+        # 8-bit image data modelled as counts, the paper's MNIST treatment
+        ef = make_exponential_family("binomial", n_trials=255)
+    elif cfg.exponential_family == "categorical":
+        ef = make_exponential_family("categorical", num_categories=256)
+    else:
+        raise ValueError(
+            f"{cfg.name}: unsupported leaf family {cfg.exponential_family!r}"
+        )
     return EiNet(graph, num_sums=cfg.num_sums, num_classes=cfg.num_classes,
-                 exponential_family=Normal())
+                 exponential_family=ef)
 
 
 def lower_einet_cell(cfg: EinetConfig, mesh, multi_pod: bool):

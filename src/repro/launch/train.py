@@ -25,6 +25,7 @@ import numpy as np
 from repro.checkpoint import CheckpointManager
 from repro.configs import EinetConfig, get_config, smoke_variant
 from repro.configs.base import ShapeSpec
+from repro.data import datasets as ds_lib
 from repro.data import synthetic
 from repro.data.pipeline import ShardedLoader, lm_loader
 from repro.dist import fault_tolerance as ft
@@ -33,7 +34,7 @@ from repro.launch import cells as dr
 from repro.launch.mesh import dp_shards, make_mesh_for
 from repro.models import lm
 from repro.optim import adamw
-from repro.train import TrainConfig, make_em_step
+from repro.train import TrainConfig, make_em_step, make_sharded_em_step
 
 
 def einet_loader(
@@ -47,20 +48,55 @@ def einet_loader(
     contiguous row block ``[(s * num_shards + sh) * n, ...)`` (mod data), so
     shards within a step are DISJOINT and steps tile the dataset.
 
-    (Regression guard: the pre-PR-3 inline lambda ignored its shard argument,
-    so every data-parallel shard trained on identical rows -- a silent
-    num_shards-times effective-batch shrink.  tests/test_train.py pins the
-    disjointness.)
+    Delegates to ``repro.data.datasets.array_loader`` (the scheme moved there
+    with the image datasets); this name stays as the launch-facing alias the
+    disjointness regression test pins (tests/test_train.py -- the pre-PR-3
+    inline lambda ignored its shard argument, silently shrinking the
+    effective batch num_shards-fold).
     """
 
-    def make(step: int, shard: int, n: int):
-        base = (step * num_shards + shard) * n
-        return {"x": data[(np.arange(n) + base) % len(data)]}
-
-    return ShardedLoader(
-        make, global_batch, num_shards=num_shards, shard_id=shard_id,
+    return ds_lib.array_loader(
+        data, global_batch, num_shards=num_shards, shard_id=shard_id,
         start_step=start_step,
     )
+
+
+def einet_train_data(cfg: EinetConfig, dataset: str, data_dir: str) -> np.ndarray:
+    """Resolve the EiNet training array for ``--dataset``.
+
+    "synthetic" keeps the pre-image-workbench behaviour (mixture images for
+    PD structures, white noise for RAT).  "mnist"/"svhn" load the real
+    dataset (npz cache -> download), falling back to the deterministic
+    procedural generator on offline hosts so the driver always runs; the
+    chosen source is printed so logs record what was actually trained on.
+    """
+    d = (cfg.height * cfg.width * cfg.num_channels
+         if cfg.structure == "pd" else cfg.num_vars)
+    if dataset == "synthetic":
+        if cfg.structure == "pd":
+            # round the proxy width UP so the slice always covers d (the
+            # old floor-division under-generated for d not divisible by 48,
+            # e.g. einet_pd_mnist's 784 -> 768-dim batches -> shape error)
+            return synthetic.gaussian_mixture_images(
+                4096, 16, -(-d // 48), 3, seed=0
+            )[:, :d]
+        return np.random.RandomState(0).randn(4096, d).astype(np.float32)
+    try:
+        ds = ds_lib.load_image_dataset(dataset, data_dir=data_dir)
+    except ds_lib.DatasetUnavailable as e:
+        print(f"[train] {e}; using the procedural fallback")
+        ds = ds_lib.load_image_dataset(dataset, data_dir=data_dir,
+                                       source="procedural")
+    print(f"[train] dataset {dataset} ({ds.source}): "
+          f"{len(ds.train_x)} train rows")
+    data, _ = ds_lib.to_domain(ds.train_x, cfg.exponential_family)
+    if data.shape[1] != d:
+        raise SystemExit(
+            f"--dataset {dataset} has {data.shape[1]} dims but --arch "
+            f"{cfg.name} models {d}; pick the matching PD config "
+            "(einet_pd_mnist for mnist, einet_pd for svhn)"
+        )
+    return data
 
 
 def main():
@@ -79,6 +115,15 @@ def main():
                          "many microbatches inside the compiled step")
     ap.add_argument("--em-mode", choices=("stochastic", "full"),
                     default="stochastic")
+    ap.add_argument("--dataset", choices=("synthetic", "mnist", "svhn"),
+                    default="synthetic",
+                    help="EiNet training data (real datasets cache under "
+                         "--data-dir; offline hosts fall back to the "
+                         "procedural generator)")
+    ap.add_argument("--data-dir", default=ds_lib.DEFAULT_DATA_DIR)
+    ap.add_argument("--dist-em", action="store_true",
+                    help="EiNet: use the shard_map psum-EM step over the "
+                         "mesh's data axes (implied by multi-process runs)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -92,21 +137,7 @@ def main():
         if isinstance(cfg, EinetConfig):
             model = dr.build_einet(cfg)
             params = model.init(jax.random.PRNGKey(0))
-            d = model.num_vars
-            data = synthetic.gaussian_mixture_images(
-                4096, 16, max(d // 48, 1), 3, seed=0
-            )[:, :d] if cfg.structure == "pd" else np.random.RandomState(0).randn(
-                4096, d).astype(np.float32)
-            if jax.process_count() > 1:
-                # Disjoint per-process shards REQUIRE a cross-process
-                # statistics reduction in the step; wiring
-                # make_em_step(axis_names=...) into the multi-host launch is
-                # a ROADMAP open item.  Refuse loudly rather than silently
-                # diverging per host.
-                raise NotImplementedError(
-                    "multi-process EiNet training needs the distributed "
-                    "compiled EM step (ROADMAP: 'Distributed compiled EM')"
-                )
+            data = einet_train_data(cfg, args.dataset, args.data_dir)
             loader = einet_loader(
                 data, args.batch * 32,
                 num_shards=jax.process_count(), shard_id=jax.process_index(),
@@ -116,12 +147,37 @@ def main():
             # replay-from-init recovery path re-feeds the initial params when
             # a failure precedes the first committed checkpoint, so the step
             # must not consume them.
-            step_jit = make_em_step(model, TrainConfig(
+            tcfg = TrainConfig(
                 mode=args.em_mode, num_microbatches=args.microbatches,
-                donate=False))
+                donate=False)
+            if args.dist_em or jax.process_count() > 1:
+                # multi-process (or explicitly requested): disjoint
+                # per-process shards REQUIRE the cross-shard statistics
+                # psum inside the step -- the shard_map form makes it
+                # explicit over the mesh's data axes.  (Closes the ROADMAP
+                # "Distributed compiled EM" item; the loud guard PR 3 left
+                # here is gone.)
+                step_jit = make_sharded_em_step(model, tcfg, mesh)
+            else:
+                step_jit = make_em_step(model, tcfg)
+            if jax.process_count() > 1:
+                # each process's loader yields only its own disjoint rows;
+                # the global-mesh step needs them assembled into one global
+                # array sharded over the data axis (a host-local np array
+                # is not addressable across processes)
+                from jax.sharding import NamedSharding, PartitionSpec as P
+
+                x_sh = NamedSharding(mesh, P("data"))
+
+                def to_device(x):
+                    return jax.make_array_from_process_local_data(
+                        x_sh, np.asarray(x, np.float32)
+                    )
+            else:
+                to_device = jnp.asarray
 
             def step_fn(state, batch):
-                p, ll = step_jit(state["params"], jnp.asarray(batch["x"]))
+                p, ll = step_jit(state["params"], to_device(batch["x"]))
                 state["last_ll"] = float(ll)
                 return {"params": p, "step": state["step"] + 1,
                         "last_ll": state["last_ll"]}

@@ -178,6 +178,64 @@ def make_em_step(
     return jax.jit(step, donate_argnums=donate)
 
 
+def make_sharded_em_step(
+    model: EiNet,
+    cfg: TrainConfig,
+    mesh,
+) -> Callable[[Dict[str, Any], jax.Array], Tuple[Dict[str, Any], jax.Array]]:
+    """The multi-host form of :func:`make_em_step`: shard_map over the data
+    axes with the cross-shard statistics reduction made EXPLICIT.
+
+    The batch is split over the mesh's data axes (``cfg.axis_names``,
+    defaulting to every DP axis present); each shard computes its local
+    scan-accumulated E-step statistics, ``psum``s the totals over
+    ``axis_names`` (one collective on the statistics, not the activations --
+    structurally a gradient all-reduce, per DESIGN.md §2), and every shard
+    then runs the identical M-step/blend on identical totals, so the
+    returned params are replicated by construction.
+
+    Inside the manually-partitioned body the logical-axis rule table is
+    disabled (``use_rules({})``): GSPMD constraints don't apply to manual
+    axes, and the psum already fixes the only layout decision that matters.
+    """
+    if cfg.mode not in ("stochastic", "full"):
+        raise ValueError(f"unknown mode {cfg.mode!r}; 'stochastic' or 'full'")
+    axes = tuple(cfg.axis_names) if cfg.axis_names else tuple(
+        a for a in ("pod", "data") if a in mesh.shape
+    )
+    if not axes:
+        raise ValueError(
+            f"mesh {dict(mesh.shape)} has no data axis to shard the EM "
+            "batch over; use make_em_step for single-shard training"
+        )
+    update = (
+        stochastic_em_update_microbatched
+        if cfg.mode == "stochastic"
+        else em_update_microbatched
+    )
+    from jax.sharding import PartitionSpec as P
+
+    from repro.dist import sharding as shlib
+
+    def local(params, x):
+        with shlib.use_rules({}):
+            return update(
+                model, params, x, cfg.em, cfg.num_microbatches, axes
+            )
+
+    sharded = jax.shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(P(), P(axes if len(axes) > 1 else axes[0])),
+        out_specs=(P(), P()),
+        # psum'd statistics make the outputs replicated; rep-tracking can't
+        # see through the update's tree_map, so assert it ourselves (tests)
+        check_rep=False,
+    )
+    donate = (0,) if _resolve_donate(cfg.donate) else ()
+    return jax.jit(sharded, donate_argnums=donate)
+
+
 def fit(
     model: EiNet,
     params: Dict[str, Any],

@@ -1,0 +1,231 @@
+"""repro.eval: masks, bpd metrics, engine-vs-direct parity, inpainting
+determinism (the Fig. 4 harness contract), and artifact writers."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import EinetConfig
+from repro.data import datasets as ds
+from repro.eval import grids as grids_lib
+from repro.eval.inpainting import INPAINT_KINDS, run_inpainting
+from repro.eval.masks import MASK_KINDS, make_mask
+from repro.eval.metrics import (
+    bits_per_dim,
+    direct_log_likelihoods,
+    engine_log_likelihoods,
+    evaluate_bpd,
+)
+from repro.launch.cells import build_einet
+from repro.serve import ServeEngine
+
+H = W = 8
+C = 1
+D = H * W * C
+
+
+@pytest.fixture(scope="module")
+def pd_net():
+    cfg = EinetConfig(
+        name="einet-pd-test", structure="pd", height=H, width=W,
+        num_channels=C, delta=4, pd_axes=("w",), num_sums=4,
+        exponential_family="normal", min_var=1e-6, max_var=1e-2,
+    )
+    model = build_einet(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return model, params
+
+
+@pytest.fixture(scope="module")
+def images():
+    d = ds.synthetic_image_dataset(H, W, C, num_train=64, num_test=24, seed=0)
+    x, _ = ds.to_domain(d.test_x, "normal")
+    return x
+
+
+# ----------------------------------------------------------------- masks
+def test_mask_kinds_shapes_and_regions():
+    for kind in MASK_KINDS:
+        m = make_mask(kind, H, W, C)
+        assert m.shape == (D,) and m.dtype == bool
+        assert 0 < m.sum() < D  # something observed, something occluded
+    left = make_mask("left_half", H, W, C).reshape(H, W, C)
+    assert not left[:, : W // 2].any() and left[:, W // 2:].all()
+    bottom = make_mask("bottom_half", H, W, C).reshape(H, W, C)
+    assert not bottom[H // 2:].any() and bottom[: H // 2].all()
+    center = make_mask("center_square", H, W, C).reshape(H, W, C)
+    assert not center[H // 4: H // 4 + H // 2, W // 4: W // 4 + W // 2].any()
+    assert center[0, 0] and center[-1, -1]
+
+
+def test_random_mask_deterministic_and_channel_coupled():
+    a = make_mask("random_pixel", H, W, 3, seed=5)
+    b = make_mask("random_pixel", H, W, 3, seed=5)
+    np.testing.assert_array_equal(a, b)
+    assert not np.array_equal(a, make_mask("random_pixel", H, W, 3, seed=6))
+    # whole pixels are occluded together: channels agree
+    pix = a.reshape(H * W, 3)
+    assert (pix.all(1) | (~pix).any(1)).all()
+    assert (pix[:, 0] == pix[:, 1]).all() and (pix[:, 1] == pix[:, 2]).all()
+    with pytest.raises(KeyError):
+        make_mask("diagonal", H, W, C)
+
+
+# --------------------------------------------------------------- metrics
+def test_bits_per_dim_formula():
+    # uniform density on [0,1]^D has ll = 0 -> bpd equals the uint8 offset
+    assert bits_per_dim(0.0, 64, offset_bits=8.0) == pytest.approx(8.0)
+    # one nat per dim = 1/ln2 bits per dim
+    assert bits_per_dim(-64.0, 64, 0.0) == pytest.approx(1.0 / np.log(2.0))
+
+
+def test_engine_ll_matches_direct_with_zero_mismatches(pd_net, images):
+    model, params = pd_net
+    res = engine_log_likelihoods(
+        model, params, images, engine=None, max_batch=8, parity_rows=None
+    )
+    assert res.parity_mismatches == 0
+    assert res.parity_rows == len(images)
+    assert np.all(np.isfinite(res.ll))
+    dense = direct_log_likelihoods(model, params, images, chunk=8)
+    np.testing.assert_allclose(res.ll, dense, atol=1e-5)
+
+
+def test_marginal_ll_streaming_and_bpd_record(pd_net, images):
+    model, params = pd_net
+    ev = make_mask("left_half", H, W, C)
+    res = engine_log_likelihoods(
+        model, params, images[:8], kind="marginal_ll", evidence_mask=ev,
+        max_batch=4, parity_rows=None,
+    )
+    assert res.parity_mismatches == 0
+    # marginal LL over fewer dims is higher than the joint
+    joint = engine_log_likelihoods(
+        model, params, images[:8], max_batch=4, parity_rows=0
+    )
+    assert np.all(res.ll >= joint.ll)
+    rec = evaluate_bpd(model, params, images[:8], offset_bits=8.0,
+                       max_batch=4, parity_rows=None)
+    assert rec["parity_mismatches"] == 0
+    assert rec["bpd"] == pytest.approx(
+        bits_per_dim(rec["mean_ll"], D, 8.0))
+    with pytest.raises(ValueError):
+        engine_log_likelihoods(model, params, images, kind="mpe")
+
+
+def test_marginal_ll_ignores_occluded_values(pd_net, images):
+    """Marginalized-LL on masked images == the dense marginal-mask path:
+    values under the occlusion cannot affect log p(x_evidence)."""
+    model, params = pd_net
+    ev = jnp.asarray(np.tile(make_mask("center_square", H, W, C), (8, 1)))
+    x = jnp.asarray(images[:8])
+    zeroed = jnp.where(ev, x, 0.0)
+    scrambled = jnp.where(ev, x, 17.3)
+    ll = model.log_likelihood(params, x, ev)
+    np.testing.assert_array_equal(np.asarray(ll),
+                                  np.asarray(model.log_likelihood(params, zeroed, ev)))
+    np.testing.assert_array_equal(np.asarray(ll),
+                                  np.asarray(model.log_likelihood(params, scrambled, ev)))
+
+
+# ------------------------------------------------------------ inpainting
+def test_inpainting_engine_bit_identical_to_direct_under_every_mask(
+    pd_net, images
+):
+    """The determinism contract: engine-batched conditional_sample / mpe
+    with per-request keys reproduces direct EiNet.query calls bit-for-bit
+    under every structured mask (parity_rows=None checks all requests)."""
+    model, params = pd_net
+    rep = run_inpainting(
+        model, params, images[:3], H, W, C, max_batch=8, seed=11,
+        parity_rows=None,
+    )
+    assert rep.metrics["parity_mismatches"] == 0
+    assert rep.metrics["parity_rows"] == rep.metrics["num_requests"]
+    assert rep.metrics["num_requests"] == len(MASK_KINDS) * len(INPAINT_KINDS) * 3
+    for mk in MASK_KINDS:
+        ev = rep.evidence_masks[mk]
+        for qk in INPAINT_KINDS:
+            recon = rep.recon(mk, qk)
+            # evidence passes through untouched; occlusion is filled
+            np.testing.assert_array_equal(recon[:, ev], images[:3][:, ev])
+            assert np.all(np.isfinite(recon))
+        assert f"{qk}_mse" in rep.metrics["per_mask"][mk]
+
+
+def test_inpainting_invariant_to_engine_batching(pd_net, images):
+    """Different micro-batch caps (hence different coalescing/padding) must
+    give byte-identical reconstructions: per-request keys decouple a draw
+    from its neighbours."""
+    model, params = pd_net
+    a = run_inpainting(model, params, images[:4], H, W, C, max_batch=2,
+                       seed=3, parity_rows=0)
+    b = run_inpainting(model, params, images[:4], H, W, C, max_batch=16,
+                       seed=3, parity_rows=0)
+    for mk in MASK_KINDS:
+        for qk in INPAINT_KINDS:
+            np.testing.assert_array_equal(a.recon(mk, qk), b.recon(mk, qk))
+
+
+def test_inpainting_mean_fill_baseline(pd_net, images):
+    model, params = pd_net
+    rep = run_inpainting(
+        model, params, images[:2], H, W, C, mask_kinds=("left_half",),
+        mean_fill=images.mean(0), parity_rows=0,
+    )
+    m = rep.metrics["per_mask"]["left_half"]
+    assert "mean_fill_mse" in m and m["mean_fill_mse"] >= 0
+    assert m["missing_fraction"] == pytest.approx(0.5)
+
+
+# -------------------------------------------------------------- artifacts
+def test_save_image_grid_and_metrics_json(tmp_path):
+    imgs = np.random.RandomState(0).rand(5, H, W, C).astype(np.float32)
+    p = grids_lib.save_image_grid(str(tmp_path / "g.png"), imgs, columns=3)
+    from PIL import Image
+
+    im = Image.open(p)
+    assert im.size[0] > W and im.size[1] > H
+    rgb = np.random.RandomState(0).rand(4, H, W, 3).astype(np.float32)
+    grids_lib.save_image_grid(str(tmp_path / "rgb.png"), rgb)
+    assert Image.open(tmp_path / "rgb.png").mode == "RGB"
+
+    rec = {"bpd": np.float32(1.5), "n": 3}
+    jp = grids_lib.save_metrics_json(str(tmp_path / "run" / "metrics.json"),
+                                     rec)
+    assert json.load(open(jp))["bpd"] == pytest.approx(1.5)
+    loaded = grids_lib.load_eval_records(str(tmp_path))
+    assert len(loaded) == 1 and loaded[0]["n"] == 3
+
+
+def test_save_inpainting_grid(tmp_path, images):
+    ev = make_mask("bottom_half", H, W, C)
+    p = grids_lib.save_inpainting_grid(
+        str(tmp_path / "fig4.png"), images[:4], ev, images[:4], images[:4],
+        H, W, C,
+    )
+    assert os.path.isfile(p)
+
+
+# -------------------------------------------------------------- workbench
+def test_run_eval_smoke_record(tmp_path):
+    from repro.eval.workbench import EvalConfig, run_eval
+
+    cfg = EvalConfig(
+        dataset="synthetic", smoke=True, steps=2, eval_rows=12,
+        inpaint_rows=2, num_samples=4, max_batch=4,
+        mask_kinds=("left_half", "random_pixel"),
+        out_dir=str(tmp_path), run_name="t",
+    )
+    rec = run_eval(cfg)
+    assert rec["parity_mismatches_total"] == 0
+    assert rec["bpd_joint"]["num_rows"] == 12
+    assert os.path.isfile(tmp_path / "t" / "metrics.json")
+    assert os.path.isfile(tmp_path / "t" / "samples.png")
+    assert os.path.isfile(tmp_path / "t" / "inpaint_left_half.png")
+    # the record is what make_experiments_md ingests
+    assert json.load(open(tmp_path / "t" / "metrics.json"))["run_name"] == "t"

@@ -286,3 +286,79 @@ def test_flash_attention_dtypes(dtype):
     np.testing.assert_allclose(
         np.asarray(out, np.float32), np.asarray(ref), atol=tol
     )
+
+
+# --------------------------------------------------------------------------
+# log_mix_exp fused custom VJP (core/layers.py)
+# --------------------------------------------------------------------------
+def _random_lme(key, b, m, c, k, scale=30.0, pad_last=True):
+    """Mixing-layer operands: normalized weights, log-domain inputs, and a
+    padding mask with the last child of the last node padded out."""
+    from repro.core.layers import normalize_mixing_weights
+
+    k1, k2 = jax.random.split(key)
+    mask = np.ones((m, c), np.float32)
+    if pad_last and c > 1:
+        mask[-1, -1] = 0.0
+    mask = jnp.asarray(mask)
+    v = normalize_mixing_weights(
+        jax.random.uniform(k1, (m, c, k), minval=0.1, maxval=1.0), mask
+    )
+    ln = -jnp.abs(jax.random.normal(k2, (b, m, c, k))) * scale
+    return v, ln, mask
+
+
+@pytest.mark.parametrize("b,m,c,k", [(4, 3, 2, 5), (9, 1, 4, 3), (2, 5, 3, 8)])
+def test_log_mix_exp_custom_vjp_matches_autodiff(b, m, c, k):
+    from repro.core.layers import log_mix_exp, log_mix_exp_ref
+
+    v, ln, mask = _random_lme(jax.random.PRNGKey(0), b, m, c, k)
+    out = log_mix_exp(v, ln, mask)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(log_mix_exp_ref(v, ln, mask)), atol=1e-6
+    )
+    gk = jax.grad(lambda *a: log_mix_exp(*a).sum(), argnums=(0, 1))(v, ln, mask)
+    gr = jax.grad(lambda *a: log_mix_exp_ref(*a).sum(), argnums=(0, 1))(
+        v, ln, mask
+    )
+    for a_, b_ in zip(gk, gr):
+        np.testing.assert_allclose(np.asarray(a_), np.asarray(b_), atol=1e-5)
+
+
+def test_log_mix_exp_grad_finite_and_masked_on_neg_inf_rows():
+    """Fully marginalized rows (every child at NEG_INF): exp(ln - a) == 1
+    everywhere, so only the explicit mask multiply keeps padded children's
+    gradients at zero -- and nothing may go inf/NaN through the s division."""
+    from repro.core.layers import log_mix_exp, log_mix_exp_ref
+
+    v, ln, mask = _random_lme(jax.random.PRNGKey(3), 5, 2, 3, 4, pad_last=True)
+    ln = ln.at[0].set(NEG_INF)  # one fully saturated batch row
+    ln = ln.at[2, 1].set(-jnp.inf)  # and one genuinely -inf node row
+    gk = jax.grad(lambda *a: log_mix_exp(*a).sum(), argnums=(0, 1))(v, ln, mask)
+    gr = jax.grad(lambda *a: log_mix_exp_ref(*a).sum(), argnums=(0, 1))(
+        v, ln, mask
+    )
+    for a_, b_ in zip(gk, gr):
+        a_, b_ = np.asarray(a_), np.asarray(b_)
+        # the fused VJP must stay finite even where the autodiff reference
+        # NaNs out (the -inf row drives its s to exactly 0: g / 0)...
+        assert np.all(np.isfinite(a_))
+        assert not np.all(np.isfinite(b_))
+        # ...and must agree wherever the reference is well-defined
+        fin = np.isfinite(b_)
+        np.testing.assert_allclose(a_[fin], b_[fin], atol=1e-5)
+    # padded child gradients are identically zero
+    gv, gln = gk
+    assert np.all(np.asarray(gv)[-1, -1] == 0.0)
+    assert np.all(np.asarray(gln)[:, -1, -1, :] == 0.0)
+
+
+def test_log_mix_exp_vjp_composes_with_vmap_and_jit():
+    from repro.core.layers import log_mix_exp
+
+    v, ln, mask = _random_lme(jax.random.PRNGKey(4), 6, 2, 3, 4)
+    g = jax.jit(jax.grad(lambda lv: log_mix_exp(v, lv, mask).sum()))
+    gv = jax.vmap(lambda row: g(row[None]))(ln)
+    np.testing.assert_allclose(
+        np.asarray(gv)[:, 0], np.asarray(g(ln)), atol=1e-5
+    )
