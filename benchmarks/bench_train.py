@@ -105,6 +105,65 @@ def _time_steps(step_fn, params, x, steps: int, reps: int) -> float:
     return best
 
 
+def leaf_scatter_timing(arch: str = "einet_pd", batch: int = 32,
+                        reps: int = 3) -> dict:
+    """The ROADMAP "fuse or not" question, measured: how much of an
+    ``em_statistics`` call is the leaf-statistic fan-out scatter (the
+    unique-index ``.at[flat].set`` into (D, K, R, |T|) -- the one E-step op
+    still pure XLA after the fused backward kernels)?
+
+    Times the full jitted E-step against a jitted program of the REAL
+    production op (``core.em.leaf_scatter``, shared with the mixture
+    E-step) at realistic operand shapes.
+    """
+    from repro.core.em import leaf_scatter
+
+    cfg = get_config(arch)
+    model = build_einet(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    d_vars = model.num_vars
+    x = jnp.asarray(
+        np.random.RandomState(0).randn(batch, d_vars).astype(np.float32)
+    )
+    stats_jit = jax.jit(lambda p, xb: em_statistics(model, p, xb))
+
+    ls = model.leaf_spec
+    d, k, r = params["phi"].shape[:3]
+    t_dim = model.ef.num_stats
+    p_len = len(ls.pair_var)
+
+    scatter_jit = jax.jit(
+        lambda sp, sd: leaf_scatter(model, sp, sd)
+    )
+    rng = np.random.RandomState(1)
+    sp = jnp.asarray(rng.rand(p_len, k, t_dim).astype(np.float32))
+    sd = jnp.asarray(rng.rand(p_len, k).astype(np.float32))
+
+    def time_fn(fn, *args):
+        out = fn(*args)  # compile + warm
+        jax.block_until_ready(jax.tree_util.tree_leaves(out)[0])
+        best = float("inf")
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            out = fn(*args)
+            jax.block_until_ready(jax.tree_util.tree_leaves(out)[0])
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    full_s = time_fn(stats_jit, params, x)
+    scatter_s = time_fn(scatter_jit, sp, sd)
+    return {
+        "arch": cfg.name,
+        "arch_id": arch,
+        "batch": batch,
+        "num_pairs": int(p_len),
+        "scatter_out_shape": [int(d), int(k), int(r), int(t_dim)],
+        "em_statistics_ms": round(full_s * 1e3, 3),
+        "leaf_scatter_ms": round(scatter_s * 1e3, 3),
+        "scatter_fraction": round(scatter_s / max(full_s, 1e-12), 4),
+    }
+
+
 def _per_step_path(model, em_cfg: EMConfig, num_microbatches: int):
     """The seed's training path: one jitted dispatch PER microbatch, host
     Python-loop accumulation, separately-jitted M-step + blend."""
@@ -216,8 +275,21 @@ def main(smoke: bool = False, archs=None, batch: int = 0, steps: int = 0,
         )
         results.append(r)
     parity_ok = all(r["grad_parity_ok"] for r in results)
+    # the leaf-statistic fan-out microbenchmark (ROADMAP "fuse or not"):
+    # cheap, so it runs at einet_pd scale even when --arch narrowed the
+    # sweep; skipped entirely under --smoke (the question needs production
+    # scale, and CI only gates parity), leaving leaf_scatter = null
+    leaf_scatter = leaf_scatter_timing("einet_pd") if not smoke else None
+    if leaf_scatter:
+        print(
+            f"[bench_train] leaf scatter ({leaf_scatter['arch']}): "
+            f"{leaf_scatter['leaf_scatter_ms']:.2f} ms of "
+            f"{leaf_scatter['em_statistics_ms']:.2f} ms em_statistics "
+            f"({100 * leaf_scatter['scatter_fraction']:.1f}%)"
+        )
     report = {
         "results": results,
+        "leaf_scatter": leaf_scatter,
         "smoke": smoke,
         "backend": jax.default_backend(),
         "parity_ok": parity_ok,

@@ -97,6 +97,39 @@ def bench_summary() -> str:
             f"{r.get('backend')}): compiled EM step vs the seed's per-step "
             "path.\n\n" + "\n".join(rows)
         )
+        sc = r.get("leaf_scatter")
+        if sc:
+            parts.append(
+                f"**Leaf EM fan-out** (`BENCH_train.json`, {sc.get('arch')} "
+                f"at batch {sc.get('batch')}): the leaf-statistic scatter "
+                f"(unique-index `.at[flat].set` into (D, K, R, |T|)) costs "
+                f"{sc.get('leaf_scatter_ms')} ms of the "
+                f"{sc.get('em_statistics_ms')} ms `em_statistics` call "
+                f"({100 * sc.get('scatter_fraction', 0):.1f}%) — the ROADMAP "
+                "\"fuse or not\" answer: not worth a fused kernel at this "
+                "scale."
+            )
+    if os.path.isfile("BENCH_mixture.json"):
+        r = json.load(open("BENCH_mixture.json"))
+        cells = r.get("results") or []
+        rows = ["| cell | C | batch/component | vmapped ms/step | "
+                "looped ms/step | speedup | param parity |",
+                "|" + "---|" * 7]
+        for c in cells:
+            rows.append(
+                f"| {c['cell']} | {c['num_components']} | "
+                f"{c['per_component_batch']} | {c['vmapped_ms_per_step']} | "
+                f"{c['looped_ms_per_step']} | x{c['speedup']} | "
+                f"{c['param_parity_max_abs_diff']:.1e} |"
+            )
+        comp_arch = cells[0].get("component_arch") if cells else "?"
+        parts.append(
+            "**Mixture training** (`BENCH_mixture.json`, backend "
+            f"{r.get('backend')}, component {comp_arch}"
+            "): ONE vmapped C-component EM step vs a Python loop of C "
+            "single-model steps (identical update; parity is bitwise).\n\n"
+            + "\n".join(rows)
+        )
     return "\n\n".join(parts) if parts else _MISSING
 
 
@@ -136,12 +169,16 @@ def eval_summary(root: str = "artifacts/eval") -> str:
                 f"{m.get('mpe_mse', 0):.4f} | "
                 f"{'—' if mf is None else f'{mf:.4f}'} |"
             )
+        mix_s = ""
+        if r.get("mixture_components"):
+            mix_s = (f", mixture of {r['mixture_components']} EiNets over "
+                     f"k-means clusters {r.get('cluster_sizes')}")
         parts.append(
             f"**{r.get('run_name')}** — {r.get('dataset')} "
             f"({r.get('dataset_source')}), "
             f"{r.get('height')}x{r.get('width')}x{r.get('channels')}, "
             f"{r.get('num_params', 0):,} params, {r.get('train_steps')} EM "
-            f"steps; test bpd {bj.get('bpd', 0):.4f} "
+            f"steps{mix_s}; test bpd {bj.get('bpd', 0):.4f} "
             f"({bj.get('num_rows')} rows at "
             f"{bj.get('engine_rows_per_s', 0):.0f} rows/s through the "
             f"engine), marginal bpd ({bm.get('mask')}) "

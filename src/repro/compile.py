@@ -1,0 +1,132 @@
+"""Shared compiled-program registry for serving and training.
+
+Before this module, the repo had two parallel compile caches: the serving
+engine's AOT program dict (``serve/engine.py``, keyed ``(kind, bucket)``) and
+training's convention that callers hold on to the ``jax.jit`` object returned
+by ``make_em_step`` (``train/pipeline.py``) -- duplicated bookkeeping, and no
+sharing when a process both trains and serves the same model (the eval
+workbench, the mixture pipeline).  This registry is the one place compiled
+programs live:
+
+  * **AOT programs** (:meth:`ProgramRegistry.aot`): ``fn.lower(...).compile()``
+    under an optional sharding-rule table -- the serving engine's padded
+    bucket programs, keyed by ``(kind, bucket[, component])``.
+  * **Jitted steps** (:meth:`ProgramRegistry.jit`): donated-buffer training
+    steps, keyed by the step kind + config -- two ``make_em_step`` calls with
+    the same (model, config) now return the SAME compiled callable instead of
+    two jit objects that each retrace.
+
+Keys are ``(anchor, key)`` where ``anchor`` is the model (or any long-lived
+object) held via ``weakref`` so dead models do not pin their programs, and
+``key`` is a hashable tuple of (fn-kind, bucket/shape/config) -- the
+"(fn, kind, bucket/shape)" contract.  Compile wall-clock and hit counts are
+tracked per registry; the engine surfaces them as ``engine.stats``.
+
+A module-level :data:`REGISTRY` is the default used by ``repro.train`` and
+``repro.serve`` (and by ``repro.mixture`` from day one); passing an explicit
+registry isolates cache statistics (benchmarks, tests).
+"""
+
+from __future__ import annotations
+
+import time
+import weakref
+from typing import Any, Callable, Dict, Hashable, Optional, Sequence, Tuple
+
+
+class ProgramRegistry:
+    """One cache of compiled XLA programs, shared across serve and train."""
+
+    def __init__(self):
+        # anchor (weak) -> {key: program}; anchors are models/engines whose
+        # death must release their programs
+        self._tables: "weakref.WeakKeyDictionary[Any, Dict[Hashable, Any]]" = (
+            weakref.WeakKeyDictionary()
+        )
+        self.stats = {"compiles": 0, "compile_s": 0.0, "hits": 0}
+
+    # ------------------------------------------------------------- inspection
+    def table(self, anchor: Any) -> Dict[Hashable, Any]:
+        """The (mutable) key -> program table anchored to ``anchor``."""
+        tab = self._tables.get(anchor)
+        if tab is None:
+            tab = {}
+            self._tables[anchor] = tab
+        return tab
+
+    def num_programs(self, anchor: Optional[Any] = None) -> int:
+        if anchor is not None:
+            return len(self._tables.get(anchor, ()))
+        return sum(len(t) for t in self._tables.values())
+
+    def clear(self) -> None:
+        self._tables = weakref.WeakKeyDictionary()
+        self.stats = {"compiles": 0, "compile_s": 0.0, "hits": 0}
+
+    # -------------------------------------------------------------- AOT path
+    def aot(
+        self,
+        anchor: Any,
+        key: Hashable,
+        fn: Callable,
+        abstract_args: Tuple[Any, ...],
+        rules: Optional[Any] = None,
+    ):
+        """Ahead-of-time compile ``fn`` for ``abstract_args`` (pytrees of
+        arrays / ShapeDtypeStructs), cached under ``(anchor, key)``.
+
+        ``rules``: optional ``repro.dist.sharding`` rule table the lowering
+        runs under (the serve-rules path); per the dist degradation contract
+        this is a no-op without a multi-device mesh.
+        """
+        table = self.table(anchor)
+        prog = table.get(key)
+        if prog is not None:
+            self.stats["hits"] += 1
+            return prog
+        import jax
+
+        jitted = jax.jit(fn)
+        t0 = time.perf_counter()
+        if rules is not None:
+            from repro.dist import sharding as shlib
+
+            with shlib.use_rules(rules):
+                prog = jitted.lower(*abstract_args).compile()
+        else:
+            prog = jitted.lower(*abstract_args).compile()
+        self.stats["compile_s"] += time.perf_counter() - t0
+        self.stats["compiles"] += 1
+        table[key] = prog
+        return prog
+
+    # ----------------------------------------------------------- jitted path
+    def jit(
+        self,
+        anchor: Any,
+        key: Hashable,
+        fn: Callable,
+        donate_argnums: Sequence[int] = (),
+    ) -> Callable:
+        """Cached ``jax.jit(fn, donate_argnums=...)`` under ``(anchor, key)``.
+
+        Unlike :meth:`aot` this compiles lazily per input shape (jax's own
+        per-shape cache), but the registry guarantees one jit object per
+        (anchor, key) -- repeat ``make_em_step`` calls stop paying a retrace.
+        """
+        table = self.table(anchor)
+        jitted = table.get(key)
+        if jitted is not None:
+            self.stats["hits"] += 1
+            return jitted
+        import jax
+
+        jitted = jax.jit(fn, donate_argnums=tuple(donate_argnums))
+        self.stats["compiles"] += 1
+        table[key] = jitted
+        return jitted
+
+
+# The process-wide default registry: train steps and serve programs share it
+# unless a caller passes its own (benchmarks and tests that count compiles).
+REGISTRY = ProgramRegistry()

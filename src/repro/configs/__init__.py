@@ -11,6 +11,7 @@ from repro.configs.base import (
 )
 
 from repro.configs import (
+    einet_celeba,
     einet_pd,
     einet_pd_mnist,
     einet_rat,
@@ -40,6 +41,7 @@ REGISTRY = {
         nemotron_4_15b,
         qwen1_5_0_5b,
         internvl2_26b,
+        einet_celeba,
         einet_pd,
         einet_pd_mnist,
         einet_rat,
@@ -59,6 +61,7 @@ ALIASES = {
     "nemotron-4-15b": "nemotron-4-15b",
     "qwen1.5-0.5b": "qwen1.5-0.5b",
     "internvl2-26b": "internvl2-26b",
+    "einet_celeba": "einet-pd-celeba",
     "einet_pd": "einet-pd-svhn",
     "einet_pd_mnist": "einet-pd-mnist",
     "einet_rat": "einet-rat",

@@ -99,6 +99,10 @@ class EiNet:
     composes with jit / grad / pjit.
     """
 
+    # the query surface the serving engine compiles programs for (the
+    # mixture model declares its own mixture_* kinds the same way)
+    query_kinds = QUERY_KINDS
+
     def __init__(
         self,
         graph: rg_lib.RegionGraph,

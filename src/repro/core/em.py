@@ -50,6 +50,33 @@ def _psum(x, axis_names):
     return jax.lax.psum(x, axis_names) if axis_names else x
 
 
+def leaf_scatter(model: EiNet, s_phi_pairs: jax.Array,
+                 s_den_pairs: jax.Array):
+    """Fan per-pair leaf statistics out to parameter layout: (P, K, |T|) ->
+    (D, K, R, |T|) and (P, K) -> (D, K, R).
+
+    Every (variable, replica) pair belongs to exactly one leaf, so this is a
+    unique-index scatter with zero cross-shard traffic under node sharding
+    (§Perf einet it.3).  THE one definition of the fan-out: the single-model
+    E-step, the vmapped mixture E-step (``repro.mixture.train``) and the
+    fuse-or-not microbenchmark (``benchmarks/bench_train.py``) all time and
+    run this exact op.
+    """
+    ls = model.leaf_spec
+    d, k, r = model.num_vars, model.K, ls.num_replica
+    tdim = model.ef.num_stats
+    flat = ls.pair_var * r + ls.pair_rep  # unique per pair entry
+    s_phi = (
+        jnp.zeros((d * r, k, tdim)).at[flat].set(s_phi_pairs)
+        .reshape(d, r, k, tdim).swapaxes(1, 2)
+    )  # (D, K, R, |T|)
+    s_den = (
+        jnp.zeros((d * r, k)).at[flat].set(s_den_pairs)
+        .reshape(d, r, k).swapaxes(1, 2)
+    )  # (D, K, R)
+    return s_phi, s_den
+
+
 def em_statistics(
     model: EiNet,
     params: Dict[str, Any],
@@ -96,7 +123,6 @@ def em_statistics(
     # leaf posteriors out to (d, k, r): every (variable, replica) pair belongs
     # to exactly one leaf, so the fan-out is a unique-index scatter.
     ls = model.leaf_spec
-    d, k, r = params["phi"].shape[:3]
     t = model.ef.sufficient_statistics(x)  # (B, D, |T|)
     cst = sharding_lib.constraint
     g_pairs = cst(g_leaf[:, ls.pair_leaf, :], ("batch", "einet_nodes", None))
@@ -104,15 +130,7 @@ def em_statistics(
     s_phi_pairs = cst(jnp.einsum("bpk,bpt->pkt", g_pairs, t_pairs),
                       ("einet_nodes", None, None))
     s_den_pairs = cst(jnp.sum(g_pairs, axis=0), ("einet_nodes", None))
-    flat = ls.pair_var * r + ls.pair_rep  # unique per pair entry
-    s_phi = (
-        jnp.zeros((d * r, k, model.ef.num_stats)).at[flat].set(s_phi_pairs)
-        .reshape(d, r, k, model.ef.num_stats).swapaxes(1, 2)
-    )  # (D, K, R, |T|)
-    s_den = (
-        jnp.zeros((d * r, k)).at[flat].set(s_den_pairs)
-        .reshape(d, r, k).swapaxes(1, 2)
-    )  # (D, K, R)
+    s_phi, s_den = leaf_scatter(model, s_phi_pairs, s_den_pairs)
     # dlogP/dlog(prior_c) = sum_x posterior(c | x): the expected class counts
     n_class = g_prior
 

@@ -24,6 +24,14 @@ from repro.eval.metrics import parity_report
 from repro.serve import Request, ServeEngine
 
 INPAINT_KINDS = ("conditional_sample", "mpe")
+MIXTURE_INPAINT_KINDS = ("mixture_conditional_sample", "mixture_mpe")
+
+
+def _short(kind: str) -> str:
+    """Canonical metric/recon key: mixture kinds score under the same names
+    as the single-EiNet kinds ("conditional_sample", "mpe"), so downstream
+    consumers (launch printing, EXPERIMENTS.md) read one schema."""
+    return kind[len("mixture_"):] if kind.startswith("mixture_") else kind
 
 
 @dataclasses.dataclass
@@ -57,18 +65,21 @@ def run_inpainting(
     max_batch: int = 32,
     seed: int = 0,
     parity_rows: Optional[int] = None,
+    kinds: Sequence[str] = INPAINT_KINDS,
 ) -> InpaintingReport:
     """Run every (image, mask, kind) cell through the engine; score + verify.
 
     ``parity_rows=None`` verifies EVERY request against the direct call --
     the Fig. 4 harness is also the engine's correctness audit, so default to
-    exhaustive.  Returns an :class:`InpaintingReport`.
+    exhaustive.  ``kinds`` selects the query pair (``MIXTURE_INPAINT_KINDS``
+    drives a mixture model; reconstructions and metrics keep the canonical
+    short names either way).  Returns an :class:`InpaintingReport`.
     """
     n, d = images.shape
     assert d == height * width * channels, (d, height, width, channels)
     if engine is None:
         engine = ServeEngine(model, params, max_batch=min(max_batch, max(n, 1)))
-    engine.warmup(kinds=INPAINT_KINDS)
+    engine.warmup(kinds=kinds)
 
     evidence = {k: make_mask(k, height, width, channels, seed=seed)
                 for k in mask_kinds}
@@ -77,22 +88,23 @@ def run_inpainting(
     rid = 0
     for mk in mask_kinds:
         ev = evidence[mk]
-        for qk in INPAINT_KINDS:
+        for qk in kinds:
             for i in range(n):
                 requests.append(Request(
                     req_id=rid, kind=qk, x=np.asarray(images[i], np.float32),
                     evidence_mask=ev,
                     seed=seed * 1_000_003 + rid,
                 ))
-                index[rid] = (mk, qk, i)
+                index[rid] = (mk, _short(qk), i)
                 rid += 1
 
     t0 = time.perf_counter()
     results = engine.run(requests)
     engine_s = time.perf_counter() - t0
 
+    short_kinds = [_short(qk) for qk in kinds]
     recon: Dict[str, Dict[str, np.ndarray]] = {
-        mk: {qk: np.empty((n, d), np.float32) for qk in INPAINT_KINDS}
+        mk: {qk: np.empty((n, d), np.float32) for qk in short_kinds}
         for mk in mask_kinds
     }
     for r_id, (mk, qk, i) in index.items():
@@ -106,7 +118,7 @@ def run_inpainting(
         row: Dict[str, float] = {
             "missing_fraction": float(np.mean(missing)),
         }
-        for qk in INPAINT_KINDS:
+        for qk in short_kinds:
             err = recon[mk][qk][:, missing] - images[:, missing]
             row[f"{qk}_mse"] = float(np.mean(err ** 2))
         if mean_fill is not None:

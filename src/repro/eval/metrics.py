@@ -75,7 +75,7 @@ def _request_batch(model: EiNet, req: Request) -> Dict[str, Any]:
     }
 
 
-# one jitted batch-1 query program per (model, kind): a fresh
+# one jitted batch-1 query program per (model, kind[, component]): a fresh
 # jit(partial(...)) per call would retrace/recompile for EVERY audited
 # request (exhaustive parity passes issue hundreds).  WeakKey so models
 # don't leak; jax's own jit cache is keyed on the partial object identity,
@@ -83,18 +83,26 @@ def _request_batch(model: EiNet, req: Request) -> Dict[str, Any]:
 _DIRECT_FNS = weakref.WeakKeyDictionary()
 
 
-def _direct_fn(model: EiNet, kind: str):
+def _direct_fn(model: EiNet, kind: str, component=None):
     per_model = _DIRECT_FNS.setdefault(model, {})
-    fn = per_model.get(kind)
+    key = kind if component is None else (kind, int(component))
+    fn = per_model.get(key)
     if fn is None:
-        fn = jax.jit(functools.partial(model.query, kind=kind))
-        per_model[kind] = fn
+        if component is None:
+            fn = jax.jit(functools.partial(model.query, kind=kind))
+        else:
+            # mixture component-pinned kinds: the component is static, same
+            # as the engine's per-component compiled programs
+            fn = jax.jit(functools.partial(
+                model.query, kind=kind, component=int(component)
+            ))
+        per_model[key] = fn
     return fn
 
 
 def direct_query(model: EiNet, params: Dict[str, Any], req: Request):
     """Direct (engine-free) result for one request: the parity oracle."""
-    fn = _direct_fn(model, req.kind)
+    fn = _direct_fn(model, req.kind, getattr(req, "component", None))
     return np.asarray(fn(params, _request_batch(model, req)))[0]
 
 
@@ -140,7 +148,8 @@ def engine_log_likelihoods(
     shared or per-row mask.  ``parity_rows=None`` checks every row;
     ``0`` skips the parity pass (pure-throughput benchmarking).
     """
-    if kind not in ("joint_ll", "marginal_ll"):
+    if kind not in ("joint_ll", "marginal_ll",
+                    "mixture_joint_ll", "mixture_marginal_ll"):
         raise ValueError(f"LL streaming supports joint/marginal, got {kind!r}")
     n = len(x)
     if engine is None:
@@ -209,11 +218,13 @@ def evaluate_bpd(
     engine: Optional[ServeEngine] = None,
     max_batch: int = 64,
     parity_rows: Optional[int] = 64,
+    kind: str = "joint_ll",
 ) -> Dict[str, Any]:
     """Test-split bits-per-dim through the engine; returns a flat JSON-able
-    record (the EXPERIMENTS.md ingestion format)."""
+    record (the EXPERIMENTS.md ingestion format).  ``kind="mixture_joint_ll"``
+    evaluates a mixture model through the identical traffic path."""
     res = engine_log_likelihoods(
-        model, params, x, kind="joint_ll", engine=engine, max_batch=max_batch,
+        model, params, x, kind=kind, engine=engine, max_batch=max_batch,
         parity_rows=parity_rows,
     )
     mean_ll = float(np.mean(res.ll))

@@ -2,14 +2,18 @@
 
 One :func:`run_eval` call is the repo's Fig. 4 / §4.2 protocol in miniature:
 
-  1. resolve the dataset (synthetic / MNIST / SVHN; ``--smoke`` and offline
-     hosts use the deterministic procedural fallback),
-  2. build a PD-structure EiNet matched to the image grid and leaf family,
-  3. train it with the compiled EM pipeline (``repro.train``),
+  1. resolve the dataset (synthetic / MNIST / SVHN / CelebA; ``--smoke`` and
+     offline hosts use the deterministic procedural fallback),
+  2. build a PD-structure EiNet matched to the image grid and leaf family --
+     or, with ``mixture=C``, the paper's §4.2 mixture-of-EiNets: k-means
+     clusters the train split (``repro.mixture.cluster``) and a single
+     vmapped EM step trains all C components over their clusters,
+  3. train with the compiled EM pipeline (``repro.train`` / the vmapped
+     ``repro.mixture.train`` step),
   4. stream the test split through the serving engine for bits-per-dim
      (joint + marginal), run the Fig. 4 inpainting harness and a sample
-     grid -- every query through ``repro.serve``, parity-audited against
-     direct ``EiNet.query`` calls,
+     grid -- every query through ``repro.serve`` (mixture runs use the
+     ``mixture_*`` kinds), parity-audited against direct query calls,
   5. write PNG grids + a metrics JSON under ``artifacts/eval/<run>/``.
 
 The returned record is flat JSON; ``parity_mismatches_total`` is the
@@ -40,7 +44,7 @@ from repro.eval.metrics import (
 from repro.serve import Request, ServeEngine
 from repro.train import TrainConfig, fit
 
-EVAL_DATASETS = ("synthetic", "mnist", "svhn")
+EVAL_DATASETS = ("synthetic", "mnist", "svhn", "celeba")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -66,6 +70,9 @@ class EvalConfig:
     mask_kinds: Sequence[str] = MASK_KINDS
     marginal_mask: str = "left_half"  # mask for the marginal-bpd record
     seed: int = 0
+    # §4.2 mixture-of-EiNets: number of k-means-clustered components
+    # (0 / 1 = a single EiNet, the pre-mixture behaviour)
+    mixture: int = 0
 
 
 def resolve_dataset(cfg: EvalConfig) -> ds_lib.ImageDataset:
@@ -84,10 +91,12 @@ def resolve_dataset(cfg: EvalConfig) -> ds_lib.ImageDataset:
 
 def pd_config_for(cfg: EvalConfig, spec: ds_lib.ImageSpec) -> EinetConfig:
     """The PD image-grid config for this dataset's geometry (28x28 MNIST,
-    32x32 SVHN, or the synthetic grid), shrunk under ``--smoke``."""
+    32x32 SVHN/CelebA, or the synthetic grid), shrunk under ``--smoke``."""
     delta = cfg.delta
     if delta is None:
-        delta = {"mnist": 7, "svhn": 8}.get(spec.name, max(spec.height // 4, 2))
+        delta = {"mnist": 7, "svhn": 8, "celeba": 8}.get(
+            spec.name, max(spec.height // 4, 2)
+        )
     if cfg.smoke:
         delta = max(delta, spec.height // 2)
     return EinetConfig(
@@ -117,18 +126,44 @@ def _train(
                num_steps=steps)
 
 
+def _train_mixture(
+    mix, cfg: EvalConfig, train_x: np.ndarray
+) -> Tuple[Dict[str, Any], list, Any]:
+    """The §4.2 protocol: k-means the train split, seed the mixture weights
+    with the cluster proportions, and run the single vmapped hard-EM step
+    over stacked per-cluster batches.  Returns (params, lls, KMeansResult).
+    """
+    from repro.mixture import (
+        MixtureTrainConfig,
+        fit_mixture,
+        prepare_mixture_training,
+    )
+
+    params, loader, km = prepare_mixture_training(
+        mix, train_x, seed=cfg.seed, global_batch=cfg.batch,
+        kmeans_iters=10 if cfg.smoke else 25,
+    )
+    steps = min(cfg.steps, 25) if cfg.smoke else cfg.steps
+    params, lls = fit_mixture(
+        mix, params, loader, MixtureTrainConfig(donate=False),
+        num_steps=steps,
+    )
+    return params, lls, km
+
+
 def _sample_grid(
     model: EiNet,
     params: Dict[str, Any],
     engine: ServeEngine,
     cfg: EvalConfig,
+    kind: str = "sample",
 ) -> Tuple[np.ndarray, Dict[str, Any]]:
     """Unconditional samples through the engine + parity record."""
     reqs = [
-        Request(req_id=i, kind="sample", seed=7_000_000 + cfg.seed * 10_007 + i)
+        Request(req_id=i, kind=kind, seed=7_000_000 + cfg.seed * 10_007 + i)
         for i in range(cfg.num_samples)
     ]
-    engine.warmup(kinds=["sample"])
+    engine.warmup(kinds=[kind])
     results = engine.run(reqs)
     samples = np.stack([results[i].value for i in range(cfg.num_samples)])
     par = parity_report(model, params, reqs, results, rows=None)
@@ -138,7 +173,8 @@ def _sample_grid(
 def run_eval(cfg: EvalConfig, model: Optional[EiNet] = None,
              params: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
     """The full workbench run; pass (model, params) to skip training and
-    evaluate an existing net (it must match the dataset geometry)."""
+    evaluate an existing net or EiNetMixture (matching the dataset
+    geometry)."""
     if cfg.dataset not in EVAL_DATASETS:
         raise KeyError(
             f"unknown eval dataset {cfg.dataset!r}; one of {EVAL_DATASETS}"
@@ -151,14 +187,24 @@ def run_eval(cfg: EvalConfig, model: Optional[EiNet] = None,
     vmax = 1.0 if cfg.family == "normal" else 255.0
 
     lls: list = []
+    km = None
     if model is None:
         from repro.launch.cells import build_einet
 
-        model = build_einet(pd_config_for(cfg, spec))
-        params, lls = _train(model, cfg, train_x)
+        base = build_einet(pd_config_for(cfg, spec))
+        if int(cfg.mixture) >= 2:
+            from repro.mixture import EiNetMixture
+
+            model = EiNetMixture(base, int(cfg.mixture))
+            params, lls, km = _train_mixture(model, cfg, train_x)
+        else:
+            model = base
+            params, lls = _train(model, cfg, train_x)
     assert model.num_vars == spec.num_dims, (
         f"model covers {model.num_vars} vars, dataset has {spec.num_dims}"
     )
+    is_mixture = hasattr(model, "num_components")
+    prefix = "mixture_" if is_mixture else ""
 
     engine = ServeEngine(model, params, max_batch=cfg.max_batch)
 
@@ -166,14 +212,15 @@ def run_eval(cfg: EvalConfig, model: Optional[EiNet] = None,
     eval_x = test_x[: cfg.eval_rows]
     bpd_joint = evaluate_bpd(
         model, params, eval_x, offset_bits=offset_bits, engine=engine,
-        parity_rows=None if cfg.smoke else 64,
+        parity_rows=None if cfg.smoke else 64, kind=prefix + "joint_ll",
     )
     from repro.eval.masks import make_mask
 
     marg_ev = make_mask(cfg.marginal_mask, spec.height, spec.width,
                         spec.channels, seed=cfg.seed)
     marg = engine_log_likelihoods(
-        model, params, eval_x, kind="marginal_ll", evidence_mask=marg_ev,
+        model, params, eval_x, kind=prefix + "marginal_ll",
+        evidence_mask=marg_ev,
         engine=engine, parity_rows=None if cfg.smoke else 64,
     )
     n_ev = int(np.sum(marg_ev))
@@ -185,12 +232,19 @@ def run_eval(cfg: EvalConfig, model: Optional[EiNet] = None,
         spec.channels, mask_kinds=cfg.mask_kinds,
         mean_fill=train_x.mean(axis=0), engine=engine, seed=cfg.seed,
         parity_rows=None,
+        kinds=(prefix + "conditional_sample", prefix + "mpe"),
     )
-    samples, sample_par = _sample_grid(model, params, engine, cfg)
+    samples, sample_par = _sample_grid(
+        model, params, engine, cfg, kind=prefix + "sample"
+    )
 
     # -- artifacts --------------------------------------------------------
     run_name = cfg.run_name or (
-        f"{spec.name}_{cfg.family}" + ("_smoke" if cfg.smoke else "")
+        f"{spec.name}_{cfg.family}"
+        # from the model, not cfg.mixture: prebuilt mixtures passed in with
+        # the default cfg still label their artifacts correctly
+        + (f"_mix{int(model.num_components)}" if is_mixture else "")
+        + ("_smoke" if cfg.smoke else "")
     )
     out = f"{cfg.out_dir}/{run_name}"
     pngs = {
@@ -218,6 +272,15 @@ def run_eval(cfg: EvalConfig, model: Optional[EiNet] = None,
         "dataset_source": dataset.source,
         "family": cfg.family,
         "smoke": cfg.smoke,
+        "mixture_components": (
+            int(model.num_components) if is_mixture else 0
+        ),
+        "cluster_sizes": (
+            km.counts.tolist() if km is not None else None
+        ),
+        "cluster_inertia": (
+            float(km.inertia) if km is not None else None
+        ),
         "height": spec.height,
         "width": spec.width,
         "channels": spec.channels,

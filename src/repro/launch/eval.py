@@ -11,6 +11,11 @@ against direct ``EiNet.query`` calls.
   PYTHONPATH=src python -m repro.launch.eval --dataset mnist --steps 200
   PYTHONPATH=src python -m repro.launch.eval --dataset svhn --family normal
 
+  # §4.2 mixture-of-EiNets: k-means clusters + C components trained by one
+  # vmapped EM step, served through the mixture_* engine kinds
+  PYTHONPATH=src python -m repro.launch.eval --dataset celeba --mixture 8
+  PYTHONPATH=src python -m repro.launch.eval --dataset celeba --mixture 4 --smoke
+
 Exit status is the acceptance gate: non-zero when any engine result is not
 bit-identical to the direct call (``parity_mismatches_total != 0``).
 """
@@ -48,6 +53,9 @@ def main(argv=None) -> dict:
     ap.add_argument("--masks", nargs="+", default=list(MASK_KINDS),
                     choices=list(MASK_KINDS))
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--mixture", type=int, default=0,
+                    help="train/eval a mixture of this many EiNets over "
+                         "k-means image clusters (§4.2); 0 = single EiNet")
     args = ap.parse_args(argv)
 
     cfg = EvalConfig(
@@ -68,13 +76,18 @@ def main(argv=None) -> dict:
         num_samples=args.num_samples,
         mask_kinds=tuple(args.masks),
         seed=args.seed,
+        mixture=args.mixture,
     )
     rec = run_eval(cfg)
 
     bj = rec["bpd_joint"]
+    mix_s = (f", mixture of {rec['mixture_components']} "
+             f"(clusters {rec['cluster_sizes']})"
+             if rec.get("mixture_components") else "")
     print(f"{rec['run_name']}: {rec['dataset']} ({rec['dataset_source']}), "
           f"{rec['height']}x{rec['width']}x{rec['channels']}, "
-          f"{rec['num_params']:,} params, {rec['train_steps']} EM steps")
+          f"{rec['num_params']:,} params, {rec['train_steps']} EM steps"
+          f"{mix_s}")
     if rec["train_ll_first"] is not None:
         print(f"train LL: {rec['train_ll_first']:9.2f} -> "
               f"{rec['train_ll_last']:9.2f}")

@@ -94,7 +94,8 @@ def einet_train_data(cfg: EinetConfig, dataset: str, data_dir: str) -> np.ndarra
         raise SystemExit(
             f"--dataset {dataset} has {data.shape[1]} dims but --arch "
             f"{cfg.name} models {d}; pick the matching PD config "
-            "(einet_pd_mnist for mnist, einet_pd for svhn)"
+            "(einet_pd_mnist for mnist, einet_pd for svhn, einet_celeba "
+            "for celeba)"
         )
     return data
 
@@ -115,12 +116,23 @@ def main():
                          "many microbatches inside the compiled step")
     ap.add_argument("--em-mode", choices=("stochastic", "full"),
                     default="stochastic")
-    ap.add_argument("--dataset", choices=("synthetic", "mnist", "svhn"),
+    ap.add_argument("--dataset",
+                    choices=("synthetic", "mnist", "svhn", "celeba"),
                     default="synthetic",
                     help="EiNet training data (real datasets cache under "
                          "--data-dir; offline hosts fall back to the "
                          "procedural generator)")
     ap.add_argument("--data-dir", default=ds_lib.DEFAULT_DATA_DIR)
+    ap.add_argument("--mixture", type=int, default=0,
+                    help="EiNet: train a mixture of this many components "
+                         "over k-means data clusters (§4.2 CelebA protocol) "
+                         "with one vmapped lockstep EM update; 0 = single "
+                         "model")
+    ap.add_argument("--mixture-assign", choices=("hard", "soft"),
+                    default="hard",
+                    help="mixture E-step: hard per-cluster EM on stacked "
+                         "batches, or soft responsibility-weighted EM on a "
+                         "shared batch")
     ap.add_argument("--dist-em", action="store_true",
                     help="EiNet: use the shard_map psum-EM step over the "
                          "mesh's data axes (implied by multi-process runs)")
@@ -134,7 +146,45 @@ def main():
     )
 
     with shlib.use_rules(rules), jax.set_mesh(mesh):
-        if isinstance(cfg, EinetConfig):
+        if isinstance(cfg, EinetConfig) and args.mixture >= 2:
+            # §4.2 mixture-of-EiNets: k-means the data, stack C components,
+            # advance them all with ONE vmapped jitted EM step.  (Mixture
+            # training is single-process for now -- the stacked component
+            # axis is not in the dist rule table yet.)
+            if jax.process_count() > 1 or args.dist_em:
+                raise SystemExit(
+                    "--mixture does not compose with --dist-em / "
+                    "multi-process yet; run single-process"
+                )
+            from repro import mixture as mx
+
+            base = dr.build_einet(cfg)
+            model = mx.EiNetMixture(base, args.mixture)
+            data = einet_train_data(cfg, args.dataset, args.data_dir)
+            mcfg = mx.MixtureTrainConfig(
+                assign=args.mixture_assign, mode=args.em_mode,
+                num_microbatches=args.microbatches, donate=False,
+            )
+            if args.mixture_assign == "hard":
+                params, loader, km = mx.prepare_mixture_training(
+                    model, data, seed=0, global_batch=args.batch * 32,
+                )
+                print(f"[train] k-means clusters: {km.counts.tolist()} "
+                      f"(inertia {km.inertia:.4f})")
+            else:
+                params = model.init(jax.random.PRNGKey(0))
+                loader = einet_loader(data, args.batch * 32)
+            step_jit = mx.make_mixture_em_step(model, mcfg)
+
+            def step_fn(state, batch):
+                p, ll = step_jit(state["params"], jnp.asarray(batch["x"]))
+                state["last_ll"] = float(ll)
+                return {"params": p, "step": state["step"] + 1,
+                        "last_ll": state["last_ll"]}
+
+            init_state = {"params": params, "step": jnp.zeros((), jnp.int32),
+                          "last_ll": 0.0}
+        elif isinstance(cfg, EinetConfig):
             model = dr.build_einet(cfg)
             params = model.init(jax.random.PRNGKey(0))
             data = einet_train_data(cfg, args.dataset, args.data_dir)

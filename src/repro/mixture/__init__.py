@@ -1,0 +1,50 @@
+"""Mixtures of EiNets (paper §4.2): k-means clustering, stacked-parameter
+mixture model, and vmapped multi-component EM.
+
+The paper's flagship CelebA result is a mixture of EiNets trained over image
+clusters.  This package makes that a first-class subsystem: deterministic
+minibatch k-means partitions the data (``cluster``), ``EiNetMixture`` stacks
+C architecturally-identical components on a leading parameter axis and
+routes ``log p`` through the fused ``log_mix_exp`` kernel (``model``), and a
+single jitted vmapped EM step advances every component in lockstep
+(``train``) -- hard per-cluster EM or soft responsibility-weighted EM, both
+via the EM-as-autodiff trick of §3.5.
+"""
+
+from repro.mixture.cluster import KMeansResult, cluster_order, kmeans
+from repro.mixture.model import (
+    MIXTURE_COMPONENT_KINDS,
+    MIXTURE_QUERY_KINDS,
+    EiNetMixture,
+)
+from repro.mixture.train import (
+    MixtureTrainConfig,
+    fit_mixture,
+    hard_mixture_em_update,
+    make_mixture_em_step,
+    microbatched_mixture_em_statistics,
+    mixture_em_statistics,
+    mixture_em_update,
+    prepare_mixture_training,
+    stacked_cluster_loader,
+    stochastic_mixture_em_update,
+)
+
+__all__ = [
+    "KMeansResult",
+    "cluster_order",
+    "kmeans",
+    "EiNetMixture",
+    "MIXTURE_QUERY_KINDS",
+    "MIXTURE_COMPONENT_KINDS",
+    "MixtureTrainConfig",
+    "fit_mixture",
+    "hard_mixture_em_update",
+    "make_mixture_em_step",
+    "microbatched_mixture_em_statistics",
+    "mixture_em_statistics",
+    "mixture_em_update",
+    "prepare_mixture_training",
+    "stacked_cluster_loader",
+    "stochastic_mixture_em_update",
+]

@@ -1,0 +1,198 @@
+"""Deterministic minibatch k-means for mixture-of-EiNets training (§4.2).
+
+The paper's CelebA model is a *mixture* of EiNets trained over image
+clusters; this module produces those clusters.  Two contracts matter more
+than clustering quality:
+
+  * **Cross-process determinism.**  Seeding follows the datasets module's
+    crc32 idiom (``zlib.crc32``, NOT ``hash()``, whose str salt varies per
+    process via PYTHONHASHSEED): a restarted trainer, a different host, or a
+    train-then-eval pair must derive the SAME partition of the data, because
+    cluster identity is baked into the per-component parameters.
+  * **Device-friendly iterations.**  Initialization (k-means++) runs on host
+    in numpy; the Lloyd / minibatch iterations are one jitted JAX step each
+    (assign = one argmin over squared distances, update = one segment-sum),
+    so clustering paper-scale data is a handful of XLA programs, not a
+    Python loop over rows.
+
+Minibatches are *contiguous deterministic blocks* (``[(i * b) % N, ...)``,
+the same mod-N tiling as ``repro.data.datasets.array_loader``) rather than
+random subsamples -- no RNG in the iteration path at all.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import zlib
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_SEED_SALT = zlib.crc32(b"repro.mixture.kmeans")
+
+
+@dataclasses.dataclass
+class KMeansResult:
+    """Cluster assignment of a dataset.
+
+    centers:      (C, D) float32 cluster centroids.
+    assignments:  (N,) int32 cluster id per row.
+    counts:       (C,) int64 rows per cluster.
+    inertia:      mean squared distance of rows to their centroid.
+    """
+
+    centers: np.ndarray
+    assignments: np.ndarray
+    counts: np.ndarray
+    inertia: float
+
+    @property
+    def num_clusters(self) -> int:
+        return len(self.centers)
+
+    def weights(self, alpha: float = 0.0) -> np.ndarray:
+        """Cluster proportions (the mixture's initial component weights),
+        optionally Laplace-smoothed so empty clusters keep nonzero mass."""
+        c = self.counts.astype(np.float64) + alpha
+        return (c / c.sum()).astype(np.float32)
+
+
+def _rng(seed: int) -> np.random.RandomState:
+    return np.random.RandomState((_SEED_SALT + seed * 7919) % 2**31)
+
+
+def _plusplus_init(
+    data: np.ndarray, num_clusters: int, rng: np.random.RandomState,
+    sample_cap: int = 16_384,
+) -> np.ndarray:
+    """k-means++ seeding on a deterministic row subsample (host, numpy)."""
+    n = len(data)
+    sub = data if n <= sample_cap else data[:: max(n // sample_cap, 1)]
+    sub = np.asarray(sub, np.float64)
+    centers = [sub[rng.randint(len(sub))]]
+    d2 = np.sum((sub - centers[0]) ** 2, axis=1)
+    for _ in range(num_clusters - 1):
+        total = d2.sum()
+        if total <= 0:  # degenerate data: duplicate rows are fine
+            centers.append(sub[rng.randint(len(sub))])
+            continue
+        r = rng.rand() * total
+        idx = int(np.searchsorted(np.cumsum(d2), r))
+        idx = min(idx, len(sub) - 1)
+        centers.append(sub[idx])
+        d2 = np.minimum(d2, np.sum((sub - centers[-1]) ** 2, axis=1))
+    return np.stack(centers).astype(np.float32)
+
+
+@jax.jit
+def _assign(data: jax.Array, centers: jax.Array) -> jax.Array:
+    """Nearest-centroid assignment: (N,) int32.  ||x - c||^2 expanded so the
+    N x C distance matrix is one matmul (no (N, C, D) intermediate)."""
+    x2 = jnp.sum(data * data, axis=1, keepdims=True)  # (N, 1)
+    c2 = jnp.sum(centers * centers, axis=1)[None, :]  # (1, C)
+    d2 = x2 + c2 - 2.0 * data @ centers.T
+    return jnp.argmin(d2, axis=1).astype(jnp.int32)
+
+
+def _update(data, centers, assign):
+    """One Lloyd update: segment-mean of the rows per cluster; empty
+    clusters keep their previous centroid."""
+    c = centers.shape[0]
+    sums = jax.ops.segment_sum(data, assign, num_segments=c)
+    counts = jax.ops.segment_sum(
+        jnp.ones((data.shape[0],), data.dtype), assign, num_segments=c
+    )
+    safe = jnp.maximum(counts, 1.0)[:, None]
+    return jnp.where(counts[:, None] > 0, sums / safe, centers), counts
+
+
+_update_jit = jax.jit(_update)
+
+
+def kmeans(
+    data: np.ndarray,
+    num_clusters: int,
+    num_iters: int = 25,
+    batch: Optional[int] = None,
+    seed: int = 0,
+    tol: float = 1e-6,
+) -> KMeansResult:
+    """Deterministic (minibatch) k-means.
+
+    Args:
+      data: (N, D) rows (any float dtype; clustered in float32).
+      num_clusters: C.
+      num_iters: Lloyd / minibatch iterations (early exit on center
+        movement < ``tol``).
+      batch: rows per iteration.  None = full-batch Lloyd; otherwise each
+        iteration i uses the contiguous block ``[(i * batch) % N, ...)``
+        (deterministic, RNG-free) and applies the standard minibatch k-means
+        per-center running-count update (Sculley, 2010).
+      seed: initialization seed (crc32-salted; process-independent).
+
+    Returns:
+      :class:`KMeansResult` with final centers and FULL-data assignments.
+    """
+    data = np.ascontiguousarray(np.asarray(data, np.float32))
+    n = len(data)
+    if not 1 <= num_clusters <= n:
+        raise ValueError(
+            f"num_clusters must be in [1, {n} rows]; got {num_clusters}"
+        )
+    centers = _plusplus_init(data, num_clusters, _rng(seed))
+    data_j = jnp.asarray(data)
+    centers_j = jnp.asarray(centers)
+    if batch is None or batch >= n:
+        for _ in range(num_iters):
+            assign = _assign(data_j, centers_j)
+            new_centers, _ = _update_jit(data_j, centers_j, assign)
+            moved = float(jnp.max(jnp.abs(new_centers - centers_j)))
+            centers_j = new_centers
+            if moved < tol:
+                break
+    else:
+        # minibatch: per-center running counts weight each step (a new
+        # center moves fast, a mature one is stable)
+        run_counts = jnp.zeros((num_clusters,), jnp.float32)
+        for i in range(num_iters):
+            base = (i * batch) % n
+            rows = (np.arange(batch) + base) % n
+            xb = data_j[jnp.asarray(rows)]
+            assign = _assign(xb, centers_j)
+            sums = jax.ops.segment_sum(xb, assign, num_segments=num_clusters)
+            cnt = jax.ops.segment_sum(
+                jnp.ones((batch,), jnp.float32), assign,
+                num_segments=num_clusters,
+            )
+            run_counts = run_counts + cnt
+            lr = cnt / jnp.maximum(run_counts, 1.0)
+            target = sums / jnp.maximum(cnt, 1.0)[:, None]
+            centers_j = jnp.where(
+                cnt[:, None] > 0,
+                centers_j + lr[:, None] * (target - centers_j),
+                centers_j,
+            )
+    final_assign = np.asarray(_assign(data_j, centers_j))
+    counts = np.bincount(final_assign, minlength=num_clusters).astype(np.int64)
+    d = data - np.asarray(centers_j)[final_assign]
+    inertia = float(np.mean(np.sum(d * d, axis=1)))
+    return KMeansResult(
+        centers=np.asarray(centers_j),
+        assignments=final_assign,
+        counts=counts,
+        inertia=inertia,
+    )
+
+
+def cluster_order(
+    assignments: np.ndarray, num_clusters: int
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Row indices grouped by cluster: (order, offsets) where
+    ``order[offsets[c]:offsets[c+1]]`` are cluster c's rows in dataset
+    order.  Deterministic (stable sort)."""
+    order = np.argsort(assignments, kind="stable").astype(np.int64)
+    counts = np.bincount(assignments, minlength=num_clusters)
+    offsets = np.concatenate([[0], np.cumsum(counts)]).astype(np.int64)
+    return order, offsets

@@ -1,0 +1,310 @@
+"""Mixtures of EiNets: the paper's §4.2 CelebA model as a first-class citizen.
+
+An :class:`EiNetMixture` is C architecturally-identical EiNet components plus
+linear-domain mixture weights:
+
+    log p(x) = log sum_c  w_c  p_c(x)
+
+The C components share ONE compiled structure (one ``EiNet`` instance, i.e.
+one set of static gather tables) and stack their parameters along a leading
+component axis -- every per-component computation is a ``vmap`` over that
+axis, so the whole mixture runs as batched dense ops instead of C separate
+model dispatches (the PyJuice observation: batched circuit execution beats
+sparse per-model dispatch).
+
+The top-level mixture IS a mixing layer, so ``log p`` routes through the
+same fused ``log_mix_exp`` kernel (custom VJP) as every in-circuit mixing
+layer: one (M=1, C, K=1) cell.  That gives the mixture EM the identical
+EM-via-autodiff treatment -- ``w * d(logP)/dw`` of the routed forward is
+exactly the summed responsibilities (``repro.mixture.train``).
+
+Query surface: the ``mixture_*`` kinds mirror EiNet's six kinds at the
+mixture level, plus component responsibilities and component-pinned
+sampling/decoding/LL (the ``component_kinds``, which the serving engine
+folds into its program key).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.einet import EiNet
+from repro.core.layers import NEG_INF, log_mix_exp
+
+# mixture-level analogues of EiNet.QUERY_KINDS + responsibilities
+MIXTURE_QUERY_KINDS = (
+    "mixture_joint_ll",
+    "mixture_marginal_ll",
+    "mixture_conditional_ll",
+    "mixture_sample",
+    "mixture_conditional_sample",
+    "mixture_mpe",
+    "mixture_responsibility",
+    # component-pinned kinds (Request.component required; the engine bakes
+    # the index into the compiled program)
+    "mixture_component_ll",
+    "mixture_component_sample",
+    "mixture_component_mpe",
+)
+MIXTURE_COMPONENT_KINDS = (
+    "mixture_component_ll",
+    "mixture_component_sample",
+    "mixture_component_mpe",
+)
+
+_W_FLOOR = 1e-38  # log-domain guard for mixture weights (matches layers.py)
+
+
+class EiNetMixture:
+    """C EiNet components with stacked parameters + mixture weights.
+
+    Static structure lives on the shared ``component`` EiNet; learnable
+    state is the pytree ``{"components": <stacked component params>,
+    "mixture_weights": (C,)}`` produced by :meth:`init`.  Every method is a
+    pure function of (params, inputs), so the mixture composes with
+    jit / grad / vmap exactly like a single EiNet.
+    """
+
+    query_kinds = MIXTURE_QUERY_KINDS
+    component_kinds = MIXTURE_COMPONENT_KINDS
+
+    def __init__(self, component: EiNet, num_components: int):
+        if num_components < 1:
+            raise ValueError(f"need >= 1 component, got {num_components}")
+        self.component = component
+        self.num_components = int(num_components)
+        self.num_vars = component.num_vars
+
+    # ------------------------------------------------------------- parameters
+    def init(self, key: jax.Array) -> Dict[str, Any]:
+        """Stacked init: component c's params are exactly
+        ``component.init(fold(key, c))``, stacked on a leading C axis."""
+        keys = jax.random.split(key, self.num_components)
+        components = jax.vmap(self.component.init)(keys)
+        weights = jnp.full(
+            (self.num_components,), 1.0 / self.num_components, jnp.float32
+        )
+        return {"components": components, "mixture_weights": weights}
+
+    def component_params(self, params: Dict[str, Any], c) -> Dict[str, Any]:
+        """Component c's (unstacked) parameter pytree; ``c`` may be traced."""
+        return jax.tree_util.tree_map(lambda a: a[c], params["components"])
+
+    def num_params(self, params: Dict[str, Any]) -> int:
+        return sum(
+            int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(params)
+        )
+
+    def project_params(self, params: Dict[str, Any]) -> Dict[str, Any]:
+        comps = jax.vmap(self.component.project_params)(params["components"])
+        w = jnp.maximum(params["mixture_weights"], 1e-12)
+        return {"components": comps, "mixture_weights": w / jnp.sum(w)}
+
+    # ---------------------------------------------------------------- forward
+    def component_log_likelihoods(
+        self,
+        params: Dict[str, Any],
+        x: jax.Array,
+        marg_mask: Optional[jax.Array] = None,
+    ) -> jax.Array:
+        """Per-component log-densities: (B, C)."""
+        def one(p):
+            return self.component.log_likelihood(p, x, marg_mask)
+
+        return jax.vmap(one, out_axes=1)(params["components"])
+
+    def mix_log_likelihoods(
+        self, weights: jax.Array, comp_ll: jax.Array
+    ) -> jax.Array:
+        """(C,) linear weights + (B, C) component LLs -> (B,) mixture LL,
+        through the fused ``log_mix_exp`` kernel (the mixture is one
+        (M=1, C, K=1) mixing cell, so its EM gradient ``w * dL/dw`` is the
+        summed responsibilities -- same custom VJP as in-circuit mixing)."""
+        b, c = comp_ll.shape
+        v = weights.reshape(1, c, 1)
+        ln = comp_ll.reshape(b, 1, c, 1)
+        mask = jnp.ones((1, c), jnp.float32)
+        return log_mix_exp(v, ln, mask)[:, 0, 0]
+
+    def log_likelihood(
+        self,
+        params: Dict[str, Any],
+        x: jax.Array,
+        marg_mask: Optional[jax.Array] = None,
+    ) -> jax.Array:
+        """log p(x) = log sum_c w_c p_c(x)  (marginals via ``marg_mask``)."""
+        comp_ll = self.component_log_likelihoods(params, x, marg_mask)
+        return self.mix_log_likelihoods(params["mixture_weights"], comp_ll)
+
+    def conditional_log_likelihood(
+        self,
+        params: Dict[str, Any],
+        x: jax.Array,
+        query_mask: jax.Array,
+        evidence_mask: jax.Array,
+    ) -> jax.Array:
+        joint = self.log_likelihood(params, x, query_mask | evidence_mask)
+        ev = self.log_likelihood(params, x, evidence_mask)
+        return joint - ev
+
+    def responsibilities(
+        self,
+        params: Dict[str, Any],
+        x: jax.Array,
+        marg_mask: Optional[jax.Array] = None,
+    ) -> jax.Array:
+        """Posterior over components r[b, c] = p(c | x_b), rows sum to 1.
+
+        Saturation-safe: logits are clamped to the NEG_INF convention first,
+        so rows whose every component underflows to -inf / NEG_INF resolve
+        to the uniform posterior instead of NaN (0/0 softmax).
+        """
+        comp_ll = self.component_log_likelihoods(params, x, marg_mask)
+        logits = (
+            jnp.log(jnp.maximum(params["mixture_weights"], _W_FLOOR))[None, :]
+            + comp_ll
+        )
+        logits = jnp.maximum(logits, NEG_INF)
+        return jax.nn.softmax(logits, axis=-1)
+
+    # --------------------------------------------------------------- sampling
+    def conditional_sample_per_key(
+        self,
+        params: Dict[str, Any],
+        keys: jax.Array,
+        x: jax.Array,
+        evidence_mask: jax.Array,
+        mode: str = "sample",
+    ) -> jax.Array:
+        """Row-independent mixture sampling: one PRNG key per batch row.
+
+        Ancestral in the mixture too: first draw (or argmax, for MPE) the
+        component from its evidence posterior p(c | x_e), then run that
+        component's induced-tree top-down pass.  Each row is a pure function
+        of its own (key, x, evidence) -- the serving engine's micro-batch
+        invariance contract, inherited from the single-EiNet path.
+        """
+        log_w = jnp.log(jnp.maximum(params["mixture_weights"], _W_FLOOR))
+
+        def one(k, xi, ei):
+            k_comp, k_draw = jax.random.split(k)
+            cll = self.component_log_likelihoods(
+                params, xi[None], ei[None]
+            )[0]  # (C,)
+            logits = jnp.maximum(log_w + cll, NEG_INF)
+            if mode == "argmax":
+                c = jnp.argmax(logits)
+            else:
+                c = jax.random.categorical(k_comp, logits)
+            p_c = self.component_params(params, c)
+            return self.component.conditional_sample(
+                p_c, k_draw, xi[None], ei[None], mode=mode
+            )[0]
+
+        return jax.vmap(one)(keys, x, evidence_mask)
+
+    def sample_per_key(
+        self, params: Dict[str, Any], keys: jax.Array, num_vars_zeros: jax.Array
+    ) -> jax.Array:
+        """Unconditional per-key sampling.  With no evidence every
+        component's evidence marginal is exactly 1 (normalized circuits), so
+        the component posterior IS the mixture weights -- draw the component
+        from them directly instead of paying C full forward passes per row.
+        Bit-identical to the conditional path on empty evidence: the logits
+        there reduce to ``log_w + 0``.
+        """
+        log_w = jnp.maximum(
+            jnp.log(jnp.maximum(params["mixture_weights"], _W_FLOOR)), NEG_INF
+        )
+        ev = jnp.zeros_like(num_vars_zeros, dtype=bool)
+
+        def one(k, xi, ei):
+            k_comp, k_draw = jax.random.split(k)
+            c = jax.random.categorical(k_comp, log_w)
+            p_c = self.component_params(params, c)
+            return self.component.conditional_sample(
+                p_c, k_draw, xi[None], ei[None]
+            )[0]
+
+        return jax.vmap(one)(keys, num_vars_zeros, ev)
+
+    def component_conditional_sample_per_key(
+        self,
+        params: Dict[str, Any],
+        keys: jax.Array,
+        x: jax.Array,
+        evidence_mask: jax.Array,
+        component: int,
+        mode: str = "sample",
+    ) -> jax.Array:
+        """Sampling pinned to one component (a static index: the serving
+        engine compiles one program per component)."""
+        p_c = self.component_params(params, int(component))
+        return self.component.conditional_sample_per_key(
+            p_c, keys, x, evidence_mask, mode=mode
+        )
+
+    # ----------------------------------------------------------------- query
+    def query(
+        self,
+        params: Dict[str, Any],
+        batch: Dict[str, Any],
+        kind: str,
+        component: Optional[int] = None,
+    ) -> jax.Array:
+        """Uniform exact-inference entry point (the serving-engine surface).
+
+        Same input signature as ``EiNet.query`` -- "x", "evidence_mask",
+        "query_mask", "keys" -- so mixture programs share the engine's
+        assembly/bucketing path unchanged.  ``component`` is a STATIC index,
+        required by the ``mixture_component_*`` kinds and rejected
+        otherwise.
+        """
+        if kind in MIXTURE_COMPONENT_KINDS:
+            if component is None:
+                raise ValueError(f"kind {kind!r} requires a component index")
+        elif component is not None:
+            raise ValueError(f"kind {kind!r} does not take a component")
+        x = batch["x"]
+        if kind == "mixture_joint_ll":
+            return self.log_likelihood(params, x)
+        if kind == "mixture_marginal_ll":
+            return self.log_likelihood(params, x, batch["evidence_mask"])
+        if kind == "mixture_conditional_ll":
+            return self.conditional_log_likelihood(
+                params, x, batch["query_mask"], batch["evidence_mask"]
+            )
+        if kind == "mixture_responsibility":
+            return self.responsibilities(params, x)
+        if kind == "mixture_sample":
+            return self.sample_per_key(
+                params, batch["keys"], jnp.zeros_like(x)
+            )
+        if kind == "mixture_conditional_sample":
+            return self.conditional_sample_per_key(
+                params, batch["keys"], x, batch["evidence_mask"]
+            )
+        if kind == "mixture_mpe":
+            return self.conditional_sample_per_key(
+                params, batch["keys"], x, batch["evidence_mask"],
+                mode="argmax",
+            )
+        if kind == "mixture_component_ll":
+            p_c = self.component_params(params, int(component))
+            return self.component.log_likelihood(p_c, x)
+        if kind == "mixture_component_sample":
+            return self.component_conditional_sample_per_key(
+                params, batch["keys"], x, batch["evidence_mask"], component
+            )
+        if kind == "mixture_component_mpe":
+            return self.component_conditional_sample_per_key(
+                params, batch["keys"], x, batch["evidence_mask"], component,
+                mode="argmax",
+            )
+        raise ValueError(
+            f"unknown query kind {kind!r}; one of {MIXTURE_QUERY_KINDS}"
+        )

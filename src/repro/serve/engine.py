@@ -36,6 +36,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compile as compile_lib
 from repro.core.einet import QUERY_KINDS, EiNet
 from repro.dist import sharding as shlib
 from repro.serve.queue import RequestQueue, SlotManager
@@ -64,7 +65,14 @@ def request_key(seed: int) -> jax.Array:
 @dataclasses.dataclass
 class Request:
     """One exact-inference query.  ``x``/masks are per-variable vectors (D,);
-    kinds that do not need a field may leave it None (zero-filled)."""
+    kinds that do not need a field may leave it None (zero-filled).
+
+    ``component`` pins a mixture request to one mixture component (required
+    by the model's ``component_kinds``, rejected for every other kind).  It
+    is a *static* index: the engine folds it into the coalescing group and
+    the compiled-program key, so per-component programs stay specialized and
+    the cache stays bounded by ``kinds x buckets x components``.
+    """
 
     req_id: int
     kind: str
@@ -72,6 +80,7 @@ class Request:
     evidence_mask: Optional[np.ndarray] = None
     query_mask: Optional[np.ndarray] = None
     seed: int = 0
+    component: Optional[int] = None
 
 
 @dataclasses.dataclass
@@ -91,6 +100,7 @@ class ServeEngine:
         max_batch: int = 64,
         buckets: Optional[Sequence[int]] = None,
         rules: Optional[shlib.Rules] = None,
+        registry: Optional[compile_lib.ProgramRegistry] = None,
     ):
         self.model = model
         self.params = params
@@ -112,12 +122,28 @@ class ServeEngine:
                 "(2-word keys); got a different default PRNG impl"
             )
         self.rules = rules
-        self.queue = RequestQueue()
+        # the engine serves whatever query surface the model declares:
+        # EiNet's six kinds, or EiNetMixture's mixture_* kinds
+        self.query_kinds: Tuple[str, ...] = tuple(
+            getattr(model, "query_kinds", QUERY_KINDS)
+        )
+        self.component_kinds: Tuple[str, ...] = tuple(
+            getattr(model, "component_kinds", ())
+        )
+        # coalescing group = (kind, component): component-pinned requests to
+        # different components never share a micro-batch (their programs are
+        # distinct -- the component is baked into the compiled program)
+        self.queue = RequestQueue(key_fn=lambda r: (r.kind, r.component))
         self.slots = SlotManager(max_batch)
-        self._programs: Dict[Tuple[str, int], Any] = {}
+        # compiled programs live in the shared registry (anchored to the
+        # model); this dict is the engine's own view of the keys it serves,
+        # so num_programs / stats stay per-engine even under a shared cache
+        self.registry = registry if registry is not None else compile_lib.REGISTRY
+        self._programs: Dict[Tuple, Any] = {}
         self.stats = {
-            "compiles": 0,
-            "compile_s": 0.0,
+            "compiles": 0,  # programs materialized into THIS engine's view
+            "compile_s": 0.0,  # compile seconds actually paid by this engine
+            "registry_hits": 0,  # programs another engine already compiled
             "steps": 0,
             "requests": 0,
             "padded_rows": 0,
@@ -125,9 +151,23 @@ class ServeEngine:
 
     # ----------------------------------------------------------- submission
     def submit(self, request: Request) -> None:
-        if request.kind not in QUERY_KINDS:
+        if request.kind not in self.query_kinds:
             raise ValueError(
-                f"unknown query kind {request.kind!r}; one of {QUERY_KINDS}"
+                f"unknown query kind {request.kind!r}; one of "
+                f"{self.query_kinds}"
+            )
+        if request.kind in self.component_kinds:
+            c = request.component
+            num = getattr(self.model, "num_components", 0)
+            if c is None or not 0 <= int(c) < num:
+                raise ValueError(
+                    f"kind {request.kind!r} needs component in [0, {num}); "
+                    f"got {c!r}"
+                )
+        elif request.component is not None:
+            raise ValueError(
+                f"kind {request.kind!r} does not take a component "
+                f"(got {request.component!r})"
             )
         self.queue.submit(request)
 
@@ -146,8 +186,18 @@ class ServeEngine:
                 return b
         return self.buckets[-1]
 
-    def _program(self, kind: str, bucket: int):
-        key = (kind, bucket)
+    def _rules_key(self):
+        if self.rules is None:
+            return None
+        return tuple(
+            sorted(
+                (k, tuple(v) if isinstance(v, (list, tuple)) else v)
+                for k, v in self.rules.items()
+            )
+        )
+
+    def _program(self, kind: str, bucket: int, component: Optional[int] = None):
+        key = (kind, bucket) if component is None else (kind, bucket, component)
         prog = self._programs.get(key)
         if prog is not None:
             return prog
@@ -158,14 +208,25 @@ class ServeEngine:
             "query_mask": jax.ShapeDtypeStruct((bucket, d), jnp.bool_),
             "keys": jax.ShapeDtypeStruct((bucket, 2), jnp.uint32),
         }
-        fn = jax.jit(functools.partial(self.model.query, kind=kind))
-        t0 = time.perf_counter()
-        if self.rules is not None:
-            with shlib.use_rules(self.rules):
-                prog = fn.lower(self.params, batch_struct).compile()
+        if component is None:
+            fn = functools.partial(self.model.query, kind=kind)
         else:
-            prog = fn.lower(self.params, batch_struct).compile()
-        self.stats["compile_s"] += time.perf_counter() - t0
+            fn = functools.partial(
+                self.model.query, kind=kind, component=int(component)
+            )
+        before = (
+            self.registry.stats["compiles"], self.registry.stats["compile_s"]
+        )
+        prog = self.registry.aot(
+            self.model, key + (self._rules_key(),), fn,
+            (self.params, batch_struct), rules=self.rules,
+        )
+        if self.registry.stats["compiles"] > before[0]:
+            self.stats["compile_s"] += (
+                self.registry.stats["compile_s"] - before[1]
+            )
+        else:
+            self.stats["registry_hits"] += 1
         self.stats["compiles"] += 1
         self._programs[key] = prog
         return prog
@@ -174,14 +235,26 @@ class ServeEngine:
         self,
         kinds: Optional[Sequence[str]] = None,
         buckets: Optional[Sequence[int]] = None,
+        components: Optional[Sequence[int]] = None,
     ) -> float:
         """Pre-compile programs for a kind/bucket cross product; returns the
-        wall-clock seconds spent compiling (the warm-up cost a deployment
-        pays once, reported separately from steady-state latency)."""
+        wall-clock seconds the warm-up took (the cost a deployment pays once,
+        reported separately from steady-state latency).  Component-pinned
+        kinds warm one program per component (all of them by default; pass
+        ``components`` to narrow)."""
         t0 = time.perf_counter()
-        for kind in kinds or QUERY_KINDS:
-            for bucket in buckets or self.buckets:
-                self._program(kind, bucket)
+        for kind in kinds or self.query_kinds:
+            if kind in self.component_kinds:
+                comps: Sequence[Optional[int]] = (
+                    components
+                    if components is not None
+                    else range(getattr(self.model, "num_components", 0))
+                )
+            else:
+                comps = (None,)
+            for c in comps:
+                for bucket in buckets or self.buckets:
+                    self._program(kind, bucket, c)
         return time.perf_counter() - t0
 
     # ------------------------------------------------------------ execution
@@ -201,31 +274,35 @@ class ServeEngine:
             keys[i] = _key_data(r.seed)
         return {"x": x, "evidence_mask": ev, "query_mask": qm, "keys": keys}
 
-    def _execute(self, kind: str, reqs: List[Request]) -> List[Result]:
+    def _execute(
+        self, kind: str, component: Optional[int], reqs: List[Request]
+    ) -> List[Result]:
         bucket = self._bucket_for(len(reqs))
         batch = self._assemble(kind, reqs, bucket)
-        prog = self._program(kind, bucket)
+        prog = self._program(kind, bucket, component)
         out = np.asarray(prog(self.params, batch))[: len(reqs)]
         self.stats["padded_rows"] += bucket - len(reqs)
         self.stats["requests"] += len(reqs)
         return [Result(r.req_id, kind, out[i]) for i, r in enumerate(reqs)]
 
     def step(self) -> List[Result]:
-        """One scheduling step: serve the oldest pending request's kind,
-        coalescing every queued request of that kind that fits the free
-        slots.  Returns the retired results (empty when idle/saturated)."""
-        kind = self.queue.oldest_kind()
-        if kind is None:
+        """One scheduling step: serve the oldest pending request's coalescing
+        group -- (kind, component) -- riding along every queued request of
+        that group that fits the free slots.  Returns the retired results
+        (empty when idle/saturated)."""
+        group = self.queue.oldest_kind()
+        if group is None:
             return []
+        kind, component = group
         limit = min(self.slots.free, self.buckets[-1])
         if limit == 0:
             return []
-        reqs = self.queue.pop_kind(kind, limit)
+        reqs = self.queue.pop_kind(group, limit)
         # limit <= slots.free, so every acquire succeeds; the leases bound
         # in-flight rows for drivers that overlap steps (async serving)
         leases = [self.slots.acquire() for _ in reqs]
         try:
-            results = self._execute(kind, reqs)
+            results = self._execute(kind, component, reqs)
         finally:
             for s in leases:
                 if s is not None:

@@ -12,7 +12,7 @@ which keeps every padded micro-batch inside the compiled bucket range.
 from __future__ import annotations
 
 import collections
-from typing import Deque, List, Optional
+from typing import Any, Callable, Deque, List, Optional
 
 
 class SlotManager:
@@ -49,16 +49,22 @@ class SlotManager:
 
 
 class RequestQueue:
-    """FIFO of heterogeneous requests with per-kind draining.
+    """FIFO of heterogeneous requests with per-group draining.
 
-    ``pop_kind`` removes up to ``limit`` requests of one query kind while
-    preserving the arrival order of everything else -- the coalescing
-    primitive: the engine always serves the oldest request's kind first, and
-    rides along every queued request of the same kind that fits the batch.
+    ``pop_kind`` removes up to ``limit`` requests of one coalescing group
+    while preserving the arrival order of everything else -- the coalescing
+    primitive: the engine always serves the oldest request's group first, and
+    rides along every queued request of the same group that fits the batch.
+
+    The group of a request defaults to its query ``kind``; ``key_fn`` lets
+    the engine refine it (the mixture path groups by ``(kind, component)`` so
+    component-pinned queries to different components never share a
+    micro-batch -- the component index is folded into the program key).
     """
 
-    def __init__(self):
+    def __init__(self, key_fn: Optional[Callable[[Any], Any]] = None):
         self._q: Deque = collections.deque()
+        self._key = key_fn or (lambda r: r.kind)
 
     def __len__(self) -> int:
         return len(self._q)
@@ -66,23 +72,25 @@ class RequestQueue:
     def submit(self, request) -> None:
         self._q.append(request)
 
-    def oldest_kind(self) -> Optional[str]:
-        return self._q[0].kind if self._q else None
+    def oldest_kind(self) -> Optional[Any]:
+        return self._key(self._q[0]) if self._q else None
 
-    def pending_kinds(self) -> List[str]:
-        """Distinct kinds in arrival order of their oldest request."""
-        seen: List[str] = []
+    def pending_kinds(self) -> List[Any]:
+        """Distinct groups in arrival order of their oldest request."""
+        seen: List[Any] = []
         for r in self._q:
-            if r.kind not in seen:
-                seen.append(r.kind)
+            k = self._key(r)
+            if k not in seen:
+                seen.append(k)
         return seen
 
-    def pop_kind(self, kind: str, limit: int) -> List:
-        """Remove and return up to ``limit`` requests of ``kind`` (FIFO)."""
+    def pop_kind(self, kind: Any, limit: int) -> List:
+        """Remove and return up to ``limit`` requests of group ``kind``
+        (FIFO)."""
         taken: List = []
         rest: List = []
         for r in self._q:
-            if r.kind == kind and len(taken) < limit:
+            if self._key(r) == kind and len(taken) < limit:
                 taken.append(r)
             else:
                 rest.append(r)

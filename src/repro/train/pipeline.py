@@ -32,6 +32,7 @@ from typing import Any, Callable, Dict, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import compile as compile_lib
 from repro.core.einet import EiNet
 from repro.core.em import (
     EMConfig,
@@ -152,14 +153,30 @@ def _resolve_donate(donate: Optional[bool]) -> bool:
     return bool(donate)
 
 
+def _step_key(cfg: TrainConfig, donate: bool, tag: str) -> tuple:
+    """Registry key for one jitted training step: the step kind + every
+    config field that changes the compiled program."""
+    return (
+        tag, cfg.mode, cfg.num_microbatches,
+        tuple(cfg.axis_names) if cfg.axis_names else None,
+        cfg.em, donate,
+    )
+
+
 def make_em_step(
     model: EiNet,
     cfg: TrainConfig = TrainConfig(),
+    registry: Optional[compile_lib.ProgramRegistry] = None,
 ) -> Callable[[Dict[str, Any], jax.Array], Tuple[Dict[str, Any], jax.Array]]:
     """Build the jitted, donated-buffer EM update: (params, x) -> (params, ll).
 
     The returned callable is the training hot path: one XLA program per
     (param, batch) shape, old parameter buffers donated to the new ones.
+    Steps are cached in the shared compiled-program registry
+    (``repro.compile``) keyed by (model, mode/microbatches/EM config), so
+    repeat calls with the same (model, cfg) return the SAME compiled callable
+    -- the serve/train unification: one registry holds serving's AOT bucket
+    programs and training's donated steps.
     """
     if cfg.mode not in ("stochastic", "full"):
         raise ValueError(f"unknown mode {cfg.mode!r}; 'stochastic' or 'full'")
@@ -174,8 +191,13 @@ def make_em_step(
             model, params, x, cfg.em, cfg.num_microbatches, cfg.axis_names
         )
 
-    donate = (0,) if _resolve_donate(cfg.donate) else ()
-    return jax.jit(step, donate_argnums=donate)
+    donate_flag = _resolve_donate(cfg.donate)
+    donate = (0,) if donate_flag else ()
+    reg = registry if registry is not None else compile_lib.REGISTRY
+    return reg.jit(
+        model, _step_key(cfg, donate_flag, "em_step"), step,
+        donate_argnums=donate,
+    )
 
 
 def make_sharded_em_step(
@@ -232,8 +254,12 @@ def make_sharded_em_step(
         # see through the update's tree_map, so assert it ourselves (tests)
         check_rep=False,
     )
-    donate = (0,) if _resolve_donate(cfg.donate) else ()
-    return jax.jit(sharded, donate_argnums=donate)
+    donate_flag = _resolve_donate(cfg.donate)
+    donate = (0,) if donate_flag else ()
+    return compile_lib.REGISTRY.jit(
+        model, _step_key(cfg, donate_flag, "sharded_em_step") + (mesh,),
+        sharded, donate_argnums=donate,
+    )
 
 
 def fit(

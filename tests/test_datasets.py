@@ -43,9 +43,54 @@ def test_svhn_procedural_shapes():
 
 def test_unknown_dataset_and_source():
     with pytest.raises(KeyError):
-        ds.load_image_dataset("celeba")
+        ds.load_image_dataset("imagenet")
     with pytest.raises(ValueError):
         ds.load_image_dataset("mnist", source="torrent")
+
+
+def test_celeba_procedural_shapes_and_splits():
+    d = ds.load_image_dataset("celeba", source="procedural", size_cap=64)
+    assert d.source == "procedural"
+    assert d.train_x.shape[1:] == (32, 32, 3) and d.train_x.dtype == np.uint8
+    assert d.spec.num_dims == 32 * 32 * 3
+    assert d.spec.num_classes == 1  # unlabeled: density estimation only
+    assert len(d.train_x) + len(d.valid_x) == 64
+    x, off = ds.to_domain(d.test_x, "normal")
+    assert x.dtype == np.float32 and off == pytest.approx(8.0)
+
+
+def test_celeba_raw_build_and_cache(tmp_path):
+    """The "download" source builds the npz cache from a locally provided
+    raw copy (CelebA has no anonymous mirror): jpgs are center-cropped,
+    resized to the 32x32 spec, and split by list_eval_partition.txt."""
+    PIL = pytest.importorskip("PIL")
+    from PIL import Image
+
+    raw = tmp_path / "celeba_raw" / "img_align_celeba"
+    raw.mkdir(parents=True)
+    rng = np.random.RandomState(0)
+    names = [f"{i:06d}.jpg" for i in range(1, 7)]
+    for name in names:
+        Image.fromarray(
+            rng.randint(0, 256, (218, 178, 3), dtype=np.uint8)
+        ).save(raw / name)
+    with open(tmp_path / "celeba_raw" / "list_eval_partition.txt", "w") as f:
+        for i, name in enumerate(names):
+            f.write(f"{name} {0 if i < 4 else 2}\n")
+    d = ds.load_image_dataset("celeba", data_dir=str(tmp_path))
+    assert d.source == "download"
+    assert len(d.train_x) + len(d.valid_x) == 4 and len(d.test_x) == 2
+    assert d.train_x.shape[1:] == (32, 32, 3)
+    assert (tmp_path / "celeba.npz").is_file()
+    # second load resolves from the npz cache, not the raw files
+    d2 = ds.load_image_dataset("celeba", data_dir=str(tmp_path))
+    assert d2.source == "cache"
+    np.testing.assert_array_equal(d.test_x, d2.test_x)
+
+
+def test_celeba_without_raw_copy_is_unavailable(tmp_path):
+    with pytest.raises(ds.DatasetUnavailable):
+        ds.load_image_dataset("celeba", data_dir=str(tmp_path))
 
 
 def test_to_domain_per_family():

@@ -1,0 +1,389 @@
+"""repro.mixture: k-means determinism, mixture model semantics, vmapped EM
+correctness, and mixture serving parity."""
+
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.compile import ProgramRegistry
+from repro.core import EiNet, Normal, random_binary_trees
+from repro.core.em import EMConfig, em_update
+from repro.core.layers import NEG_INF
+from repro.eval.metrics import parity_report
+from repro.mixture import (
+    MIXTURE_QUERY_KINDS,
+    EiNetMixture,
+    MixtureTrainConfig,
+    hard_mixture_em_update,
+    kmeans,
+    make_mixture_em_step,
+    mixture_em_update,
+    stacked_cluster_loader,
+)
+from repro.serve import Request, ServeEngine
+
+
+@pytest.fixture(scope="module")
+def small_mix():
+    g = random_binary_trees(8, 2, 2, seed=0)
+    net = EiNet(g, num_sums=3, exponential_family=Normal())
+    mix = EiNetMixture(net, 3)
+    params = mix.init(jax.random.PRNGKey(0))
+    return mix, params
+
+
+@pytest.fixture(scope="module")
+def blobs():
+    """Three well-separated Gaussian blobs, shuffled deterministically."""
+    rng = np.random.RandomState(0)
+    centers = np.array([[-6.0] * 8, [0.0] * 8, [6.0] * 8], np.float32)
+    x = np.concatenate(
+        [c + rng.randn(40, 8).astype(np.float32) * 0.3 for c in centers]
+    )
+    truth = np.repeat(np.arange(3), 40)
+    order = rng.permutation(len(x))
+    return x[order], truth[order]
+
+
+# ------------------------------------------------------------------- k-means
+def test_kmeans_recovers_separated_blobs(blobs):
+    x, truth = blobs
+    km = kmeans(x, 3, seed=0)
+    assert km.num_clusters == 3
+    assert sorted(km.counts.tolist()) == [40, 40, 40]
+    # each k-means cluster is pure wrt the generating blob
+    for c in range(3):
+        assert len(set(truth[km.assignments == c])) == 1
+    assert km.inertia < 2.0
+    w = km.weights()
+    np.testing.assert_allclose(w, [1 / 3] * 3, atol=1e-6)
+    assert w.dtype == np.float32
+
+
+def test_kmeans_minibatch_mode_and_validation(blobs):
+    x, _ = blobs
+    km = kmeans(x, 3, seed=0, batch=32, num_iters=30)
+    assert km.inertia < 2.0  # minibatch converges on easy data too
+    with pytest.raises(ValueError):
+        kmeans(x, 0)
+    with pytest.raises(ValueError):
+        kmeans(x[:2], 3)
+
+
+def test_kmeans_deterministic_across_processes(blobs, tmp_path):
+    """The cross-process reproducibility contract (crc32 seeding, no
+    PYTHONHASHSEED dependence, RNG-free iterations): a fresh interpreter
+    must derive bit-identical centers and assignments."""
+    import os
+
+    x, _ = blobs
+    km = kmeans(x, 3, seed=7, batch=32)
+    np.save(tmp_path / "x.npy", x)
+    code = (
+        "import numpy as np; from repro.mixture import kmeans\n"
+        f"km = kmeans(np.load(r'{tmp_path / 'x.npy'}'), 3, seed=7, batch=32)\n"
+        f"np.save(r'{tmp_path / 'centers.npy'}', km.centers)\n"
+        f"np.save(r'{tmp_path / 'assign.npy'}', km.assignments)\n"
+    )
+    # a DIFFERENT hash salt is the whole point; everything else inherits
+    env = dict(os.environ,
+               PYTHONPATH="src" + os.pathsep + os.environ.get("PYTHONPATH", ""),
+               PYTHONHASHSEED="12345")
+    subprocess.run([sys.executable, "-c", code], check=True, env=env)
+    np.testing.assert_array_equal(
+        km.centers, np.load(tmp_path / "centers.npy")
+    )
+    np.testing.assert_array_equal(
+        km.assignments, np.load(tmp_path / "assign.npy")
+    )
+
+
+def test_stacked_cluster_loader_contract(blobs):
+    x, _ = blobs
+    km = kmeans(x, 3, seed=0)
+    loader = stacked_cluster_loader(x, km.assignments, 3,
+                                    per_component_batch=8)
+    b = loader.batch_at(0)["x"]
+    assert b.shape == (3, 8, 8) and b.dtype == np.float32
+    # every row of slice c really belongs to cluster c
+    for c in range(3):
+        for row in b[c]:
+            idx = np.where((x == row).all(axis=1))[0]
+            assert km.assignments[idx[0]] == c
+    # deterministic + steps tile each cluster
+    np.testing.assert_array_equal(
+        loader.batch_at(0)["x"],
+        stacked_cluster_loader(x, km.assignments, 3, 8).batch_at(0)["x"],
+    )
+    seen = np.concatenate([loader.batch_at(s)["x"][0] for s in range(5)])
+    assert len(np.unique(seen, axis=0)) == 40  # cluster 0 fully covered
+
+
+# -------------------------------------------------------------------- model
+def test_mixture_init_and_log_prob_reference(small_mix):
+    mix, params = small_mix
+    assert params["components"]["phi"].shape[0] == 3
+    np.testing.assert_allclose(params["mixture_weights"], [1 / 3] * 3)
+    # stacked init == per-key single inits
+    keys = jax.random.split(jax.random.PRNGKey(0), 3)
+    single = mix.component.init(keys[1])
+    for a, b in zip(
+        jax.tree_util.tree_leaves(mix.component_params(params, 1)),
+        jax.tree_util.tree_leaves(single),
+    ):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-7)
+
+    x = jnp.asarray(np.random.RandomState(1).randn(9, 8), jnp.float32)
+    comp_ll = mix.component_log_likelihoods(params, x)
+    assert comp_ll.shape == (9, 3)
+    ref = jax.scipy.special.logsumexp(
+        comp_ll + jnp.log(params["mixture_weights"])[None, :], axis=-1
+    )
+    np.testing.assert_allclose(
+        np.asarray(mix.log_likelihood(params, x)), np.asarray(ref), atol=1e-5
+    )
+    # a mixture with all mass on component 1 degenerates to that component
+    p1 = dict(params)
+    p1["mixture_weights"] = jnp.asarray([0.0, 1.0, 0.0])
+    np.testing.assert_allclose(
+        np.asarray(mix.log_likelihood(p1, x)),
+        np.asarray(mix.component.log_likelihood(
+            mix.component_params(params, 1), x)),
+        atol=1e-5,
+    )
+
+
+def test_responsibilities_sum_to_one_under_saturation(small_mix):
+    mix, params = small_mix
+    x = jnp.asarray(np.random.RandomState(2).randn(4, 8), jnp.float32)
+    r = mix.responsibilities(params, x)
+    assert r.shape == (4, 3)
+    np.testing.assert_allclose(np.asarray(r.sum(axis=1)), 1.0, atol=1e-6)
+    # rows so far in the tails that every component underflows: the clamped
+    # logits resolve to the uniform posterior, not NaN
+    x_sat = jnp.full((2, 8), 1e8, jnp.float32)
+    r_sat = np.asarray(mix.responsibilities(params, x_sat))
+    assert np.all(np.isfinite(r_sat))
+    np.testing.assert_allclose(r_sat.sum(axis=1), 1.0, atol=1e-6)
+    np.testing.assert_allclose(r_sat, 1.0 / 3.0, atol=1e-6)
+    # an explicitly -inf/NEG_INF weight row behaves the same way
+    p0 = dict(params)
+    p0["mixture_weights"] = jnp.asarray([0.0, 0.0, 0.0])
+    r0 = np.asarray(mix.responsibilities(p0, x))
+    assert np.all(np.isfinite(r0))
+    np.testing.assert_allclose(r0.sum(axis=1), 1.0, atol=1e-6)
+
+
+def test_mixture_sampling_row_independent(small_mix):
+    mix, params = small_mix
+    d = mix.num_vars
+    keys = jnp.stack([jax.random.PRNGKey(i) for i in range(6)])
+    x = jnp.asarray(np.random.RandomState(3).randn(6, d), jnp.float32)
+    ev = jnp.asarray(np.random.RandomState(4).rand(6, d) < 0.5)
+    full = mix.conditional_sample_per_key(params, keys, x, ev)
+    # evidence passthrough
+    np.testing.assert_array_equal(np.asarray(full)[np.asarray(ev)],
+                                  np.asarray(x)[np.asarray(ev)])
+    # row 2 alone == row 2 of the batch (micro-batch invariance)
+    solo = mix.conditional_sample_per_key(
+        params, keys[2:3], x[2:3], ev[2:3]
+    )
+    np.testing.assert_array_equal(np.asarray(solo[0]), np.asarray(full[2]))
+    # component-pinned sampling equals the single component's path
+    pinned = mix.component_conditional_sample_per_key(
+        params, keys, x, ev, component=1
+    )
+    direct = mix.component.conditional_sample_per_key(
+        mix.component_params(params, 1), keys, x, ev
+    )
+    np.testing.assert_array_equal(np.asarray(pinned), np.asarray(direct))
+
+
+# ----------------------------------------------------------------- training
+def test_soft_full_em_is_monotone(small_mix):
+    mix, params = small_mix
+    x = jnp.asarray(np.random.RandomState(5).randn(24, 8), jnp.float32)
+    cfg = MixtureTrainConfig(assign="soft", mode="full")
+    lls = []
+    p = params
+    for _ in range(6):
+        p, ll = mixture_em_update(mix, p, x, cfg)
+        lls.append(float(ll))
+    assert all(b >= a - 1e-4 for a, b in zip(lls, lls[1:])), lls
+    assert lls[-1] > lls[0]
+
+
+def test_single_component_soft_em_matches_single_model(small_mix):
+    """C=1 soft mixture EM must reduce exactly to single-model EM."""
+    mix, _ = small_mix
+    one = EiNetMixture(mix.component, 1)
+    params = one.init(jax.random.PRNGKey(3))
+    x = jnp.asarray(np.random.RandomState(6).randn(16, 8), jnp.float32)
+    newp, ll = mixture_em_update(
+        one, params, x, MixtureTrainConfig(assign="soft", mode="full")
+    )
+    ref, ll_ref = em_update(
+        mix.component, one.component_params(params, 0), x, EMConfig()
+    )
+    np.testing.assert_allclose(float(ll), float(ll_ref), atol=1e-5)
+    for a, b in zip(
+        jax.tree_util.tree_leaves(one.component_params(newp, 0)),
+        jax.tree_util.tree_leaves(ref),
+    ):
+        if np.asarray(a).size:
+            np.testing.assert_allclose(
+                np.asarray(a), np.asarray(b), atol=2e-6
+            )
+
+
+@pytest.mark.parametrize("num_sums", [4, 3])  # incl. odd K (lane-padded)
+def test_vmapped_hard_em_matches_looped_components(num_sums):
+    g = random_binary_trees(8, 2, 2, seed=1)
+    net = EiNet(g, num_sums=num_sums, exponential_family=Normal())
+    mix = EiNetMixture(net, 4)
+    params = mix.init(jax.random.PRNGKey(1))
+    x = jnp.asarray(
+        np.random.RandomState(7).randn(4, 8, 8).astype(np.float32)
+    )
+    cfg = MixtureTrainConfig(assign="hard", mode="stochastic")
+    new, _ll = hard_mixture_em_update(mix, params, x, cfg)
+    from repro.core.em import stochastic_em_update
+
+    for c in range(4):
+        ref, _ = stochastic_em_update(
+            net, mix.component_params(params, c), x[c], cfg.em
+        )
+        for a, b in zip(
+            jax.tree_util.tree_leaves(mix.component_params(new, c)),
+            jax.tree_util.tree_leaves(ref),
+        ):
+            if np.asarray(a).size:
+                np.testing.assert_allclose(
+                    np.asarray(a), np.asarray(b), atol=2e-6
+                )
+
+
+def test_hard_em_shape_validation_and_step_cache(small_mix):
+    mix, params = small_mix
+    with pytest.raises(ValueError):
+        hard_mixture_em_update(
+            mix, params, jnp.zeros((2, 4, 8)), MixtureTrainConfig()
+        )
+    with pytest.raises(ValueError):
+        make_mixture_em_step(mix, MixtureTrainConfig(assign="fuzzy"))
+    with pytest.raises(ValueError):
+        make_mixture_em_step(mix, MixtureTrainConfig(mode="sgd"))
+    # the shared registry returns the SAME compiled step for the same
+    # (model, config) -- the serve/train unification contract
+    reg = ProgramRegistry()
+    cfg = MixtureTrainConfig(donate=False)
+    s1 = make_mixture_em_step(mix, cfg, registry=reg)
+    s2 = make_mixture_em_step(mix, cfg, registry=reg)
+    assert s1 is s2
+    assert reg.stats["hits"] == 1 and reg.stats["compiles"] == 1
+
+
+def test_mixture_learns_clustered_data(blobs):
+    """End-to-end: k-means + hard vmapped EM on separable blobs raises the
+    mixture LL far above the init."""
+    x, _ = blobs
+    g = random_binary_trees(8, 2, 2, seed=2)
+    net = EiNet(g, num_sums=3, exponential_family=Normal())
+    mix = EiNetMixture(net, 3)
+    km = kmeans(x, 3, seed=0)
+    params = mix.init(jax.random.PRNGKey(2))
+    params["mixture_weights"] = jnp.asarray(km.weights(alpha=1.0))
+    loader = stacked_cluster_loader(x, km.assignments, 3,
+                                    per_component_batch=16)
+    step = make_mixture_em_step(mix, MixtureTrainConfig(donate=False))
+    ll0 = float(jnp.mean(mix.log_likelihood(params, jnp.asarray(x))))
+    p = params
+    for s in range(15):
+        p, _ = step(p, jnp.asarray(loader.batch_at(s)["x"]))
+    ll1 = float(jnp.mean(mix.log_likelihood(p, jnp.asarray(x))))
+    assert ll1 > ll0 + 5.0, (ll0, ll1)
+
+
+# ------------------------------------------------------------------ serving
+def test_engine_bitwise_parity_for_every_mixture_kind(small_mix):
+    mix, params = small_mix
+    engine = ServeEngine(mix, params, max_batch=4)
+    rng = np.random.RandomState(11)
+    reqs, rid = [], 0
+    for kind in MIXTURE_QUERY_KINDS:
+        comps = range(mix.num_components) \
+            if kind in mix.component_kinds else [None]
+        for c in comps:
+            for _ in range(2):
+                x = rng.randn(8).astype(np.float32)
+                ev = rng.rand(8) < 0.5
+                reqs.append(Request(
+                    rid, kind, x=x, evidence_mask=ev, query_mask=~ev,
+                    seed=500 + rid, component=c,
+                ))
+                rid += 1
+    results = engine.run(reqs)
+    par = parity_report(mix, params, reqs, results, rows=None)
+    assert par["parity_rows"] == len(reqs)
+    assert par["parity_mismatches"] == 0, par
+    # responsibilities rows come back (C,) and sum to 1
+    resp = [results[r.req_id].value for r in reqs
+            if r.kind == "mixture_responsibility"]
+    for v in resp:
+        assert v.shape == (3,)
+        np.testing.assert_allclose(v.sum(), 1.0, atol=1e-6)
+
+
+def test_engine_component_folding_and_validation(small_mix):
+    mix, params = small_mix
+    engine = ServeEngine(mix, params, max_batch=4,
+                         registry=ProgramRegistry())
+    with pytest.raises(ValueError):
+        engine.submit(Request(0, "joint_ll"))  # single-EiNet kind
+    with pytest.raises(ValueError):
+        engine.submit(Request(0, "mixture_component_sample"))  # no component
+    with pytest.raises(ValueError):
+        engine.submit(Request(0, "mixture_component_sample", component=9))
+    with pytest.raises(ValueError):
+        engine.submit(Request(0, "mixture_joint_ll", component=1))
+    # same kind, different components -> distinct programs, never coalesced
+    d = mix.num_vars
+    rng = np.random.RandomState(12)
+    reqs = [
+        Request(i, "mixture_component_mpe",
+                x=rng.randn(d).astype(np.float32),
+                evidence_mask=rng.rand(d) < 0.5, seed=i, component=i % 3)
+        for i in range(9)
+    ]
+    engine.run(reqs)
+    comp_keys = {k for k in engine._programs if len(k) == 3}
+    assert {k[2] for k in comp_keys} == {0, 1, 2}
+    # cache stays bounded: replaying the same traffic shape adds no programs
+    before = engine.num_programs
+    engine.run([Request(100 + i, "mixture_component_mpe",
+                        x=rng.randn(d).astype(np.float32),
+                        evidence_mask=rng.rand(d) < 0.5,
+                        seed=i, component=i % 3) for i in range(9)])
+    assert engine.num_programs == before
+    assert engine.stats["compiles"] == engine.num_programs
+
+
+def test_engine_shared_registry_across_engines(small_mix):
+    """Two engines over the same model share compiled programs through one
+    registry: the second engine pays zero compile seconds."""
+    mix, params = small_mix
+    reg = ProgramRegistry()
+    e1 = ServeEngine(mix, params, max_batch=2, registry=reg)
+    e1.warmup(kinds=["mixture_joint_ll"])
+    compiled = reg.stats["compiles"]
+    assert compiled == len(e1.buckets)
+    e2 = ServeEngine(mix, params, max_batch=2, registry=reg)
+    e2.warmup(kinds=["mixture_joint_ll"])
+    assert reg.stats["compiles"] == compiled  # all hits
+    assert e2.stats["registry_hits"] == len(e2.buckets)
+    assert e2.stats["compile_s"] == 0.0
