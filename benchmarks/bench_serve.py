@@ -26,7 +26,10 @@ from repro.serve import format_report, mixed_requests, run_benchmark
 SMOKE_CONFIG = EinetConfig(
     name="einet-rat-serve-smoke",
     structure="rat",
-    num_vars=16,
+    # 32 vars: the smallest RAT shape whose scopes don't collide across
+    # repetitions, so the whole circuit depth-groups and the smoke run
+    # exercises the grouped execution path (see bench_train.SMOKE_CONFIG)
+    num_vars=32,
     depth=2,
     num_repetitions=2,
     num_sums=4,
@@ -49,18 +52,33 @@ def main(
     params = model.init(jax.random.PRNGKey(0))
     reqs = mixed_requests(model.num_vars, requests, seed=0)
     report = run_benchmark(model, params, reqs, max_batch=max_batch, reps=reps)
-    ok = report["parity_max_abs_diff"] <= 1e-5
+    parity_ok = report["parity_max_abs_diff"] <= 1e-5
+    # LL serving must run the depth-grouped plan (sampling keeps the
+    # per-layer cache path by design); einet_pd's gather topology is the
+    # known structural fallback
+    grouped_ok = model.grouped_active or cfg.structure == "pd"
+    ok = parity_ok and grouped_ok
     report.update(
         arch=cfg.name,
         num_vars=model.num_vars,
         num_sums=model.K,
         smoke=smoke,
-        parity_ok=ok,
+        parity_ok=parity_ok,
+        grouped_ok=grouped_ok,
+        # kernel launches per forward: per-layer loop vs depth-grouped plan
+        grouping=model.grouping_summary(),
         timestamp=datetime.datetime.now(datetime.timezone.utc).isoformat(),
     )
     print(format_report(report))
-    if not ok:
+    g = report["grouping"]
+    print(f"grouping  : launches {g['launches_per_layer']} -> "
+          f"{g['launches_grouped']} ({g['fused_groups']} fused group(s) over "
+          f"{g['fused_pairs']}/{g['num_pairs']} pairs)")
+    if not parity_ok:
         print(f"PARITY FAILURE: {report['parity_max_abs_diff']:.2e} > 1e-5")
+    if not grouped_ok:
+        print("GROUPED-EXECUTION FAILURE: arch expected to depth-group fell "
+              "back to the per-layer path")
     if out:
         with open(out, "w") as f:
             json.dump(report, f, indent=2, sort_keys=True)

@@ -84,13 +84,17 @@ def bench_summary() -> str:
     if os.path.isfile("BENCH_train.json"):
         r = json.load(open("BENCH_train.json"))
         rows = ["| arch | batch (microbatches) | compiled ms/step | "
-                "per-step ms/step | speedup | grad parity |",
-                "|" + "---|" * 6]
+                "per-step ms/step | speedup | launches | grad parity |",
+                "|" + "---|" * 7]
         for c in r.get("results", []):
+            g = c.get("grouping") or {}
+            launches = (f"{g['launches_per_layer']} -> {g['launches_grouped']}"
+                        if g else "—")
             rows.append(
                 f"| {c['arch']} | {c['batch']} ({c['microbatches']}) | "
                 f"{c['fused_ms_per_step']} | {c['per_step_ms_per_step']} | "
-                f"x{c['speedup']} | {c['grad_parity_max_abs_diff']:.1e} |"
+                f"x{c['speedup']} | {launches} | "
+                f"{c['grad_parity_max_abs_diff']:.1e} |"
             )
         parts.append(
             "**Training** (`BENCH_train.json`, backend "

@@ -12,11 +12,9 @@ materialized buffer, x trips) as the traffic model, floored by the parameter
 bytes that must stream from HBM each step.  Collective bytes are summed
 result-buffer bytes of all collective ops, x trips.
 
-Also reported per cell:
-  * MODEL_FLOPS = 6 * N_active * tokens (train) or 2 * N_active * tokens
-    (serve), the useful-work floor;
-  * the ratio MODEL_FLOPS_per_device / HLO_FLOPs (remat/dispatch waste);
-  * dominant term and a one-line mitigation note.
+Also reported per cell: the dominant term and a one-line mitigation note.
+(EiNet EM steps have no tokens-x-active-params useful-work model, so the
+MODEL_FLOPS floor columns report "-" and the HLO flops stand alone.)
 
 Usage:  PYTHONPATH=src python -m benchmarks.roofline [--dir artifacts/dryrun]
 writes a markdown table to stdout (EXPERIMENTS.md §Roofline embeds it).
@@ -33,26 +31,14 @@ PEAK_FLOPS = 197e12  # bf16 / chip
 HBM_BW = 819e9  # B/s
 LINK_BW = 50e9  # B/s per ICI link
 
-from repro.configs import SHAPES_BY_NAME, EinetConfig, get_config
-
-
 def model_flops_per_device(rec: Dict) -> Optional[float]:
-    """Useful-work floor, per device."""
-    arch, shape = rec["arch"], rec.get("shape")
-    cfg = get_config(arch)
-    n_dev = rec["num_devices"]
-    if isinstance(cfg, EinetConfig):
-        return None
-    n_act = cfg.active_param_count()
-    s = SHAPES_BY_NAME[shape]
-    if rec["kind"] == "train":
-        tokens = s.global_batch * s.seq_len
-        return 6.0 * n_act * tokens / n_dev
-    if rec["kind"] == "prefill":
-        tokens = s.global_batch * s.seq_len
-        return 2.0 * n_act * tokens / n_dev
-    tokens = s.global_batch  # decode: one token per sequence
-    return 2.0 * n_act * tokens / n_dev
+    """Useful-work floor, per device.
+
+    EiNet EM steps have no tokens-x-active-params flop model (the useful
+    work IS the circuit evaluation the HLO analyzer already counts), so
+    there is no separate floor: every cell reports None and the roofline
+    uses the HLO flops directly."""
+    return None
 
 
 def analyze_record(rec: Dict) -> Dict:

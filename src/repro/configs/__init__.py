@@ -1,14 +1,13 @@
-"""Architecture registry: --arch <id> resolves here."""
+"""Architecture registry: --arch <id> resolves here.
 
-from repro.configs.base import (
-    SHAPES,
-    SHAPES_BY_NAME,
-    EinetConfig,
-    ModelConfig,
-    ShapeSpec,
-    applicable,
-    smoke_variant,
-)
+EiNet-only: every registered config is an ``EinetConfig``.  The template LM
+architectures (transformer/SSM/MoE configs and their model code) that rode
+in with the repo scaffold were removed -- they were never part of the
+paper's system and kept leaking into --arch listings, packaging, and test
+collection.
+"""
+
+from repro.configs.base import EinetConfig
 
 from repro.configs import (
     einet_celeba,
@@ -16,31 +15,11 @@ from repro.configs import (
     einet_pd_mnist,
     einet_rat,
     einet_rat_large,
-    granite_8b,
-    internvl2_26b,
-    jamba_v0_1_52b,
-    kimi_k2_1t_a32b,
-    llama3_2_3b,
-    moonshot_v1_16b_a3b,
-    musicgen_medium,
-    nemotron_4_15b,
-    qwen1_5_0_5b,
-    xlstm_350m,
 )
 
 REGISTRY = {
     m.CONFIG.name: m.CONFIG
     for m in (
-        musicgen_medium,
-        jamba_v0_1_52b,
-        xlstm_350m,
-        kimi_k2_1t_a32b,
-        moonshot_v1_16b_a3b,
-        granite_8b,
-        llama3_2_3b,
-        nemotron_4_15b,
-        qwen1_5_0_5b,
-        internvl2_26b,
         einet_celeba,
         einet_pd,
         einet_pd_mnist,
@@ -51,16 +30,6 @@ REGISTRY = {
 
 # stable short ids for --arch flags / file names
 ALIASES = {
-    "musicgen-medium": "musicgen-medium",
-    "jamba-v0.1-52b": "jamba-v0.1-52b",
-    "xlstm-350m": "xlstm-350m",
-    "kimi-k2-1t-a32b": "kimi-k2-1t-a32b",
-    "moonshot-v1-16b-a3b": "moonshot-v1-16b-a3b",
-    "granite-8b": "granite-8b",
-    "llama3.2-3b": "llama3.2-3b",
-    "nemotron-4-15b": "nemotron-4-15b",
-    "qwen1.5-0.5b": "qwen1.5-0.5b",
-    "internvl2-26b": "internvl2-26b",
     "einet_celeba": "einet-pd-celeba",
     "einet_pd": "einet-pd-svhn",
     "einet_pd_mnist": "einet-pd-mnist",
@@ -68,12 +37,8 @@ ALIASES = {
     "einet_rat_large": "einet-rat-large",
 }
 
-LM_ARCHS = tuple(
-    n for n, c in REGISTRY.items() if isinstance(c, ModelConfig)
-)
 
-
-def get_config(name: str):
+def get_config(name: str) -> EinetConfig:
     name = ALIASES.get(name, name)
     if name not in REGISTRY:
         raise KeyError(
@@ -82,8 +47,4 @@ def get_config(name: str):
     return REGISTRY[name]
 
 
-__all__ = [
-    "REGISTRY", "ALIASES", "LM_ARCHS", "get_config", "ModelConfig",
-    "EinetConfig", "ShapeSpec", "SHAPES", "SHAPES_BY_NAME", "applicable",
-    "smoke_variant",
-]
+__all__ = ["REGISTRY", "ALIASES", "get_config", "EinetConfig"]

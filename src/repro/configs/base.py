@@ -1,134 +1,19 @@
-"""Config system: architecture configs, input-shape specs, applicability.
+"""Config system: the paper's EiNet architectures as frozen dataclasses.
 
-Every assigned architecture is one ``ModelConfig`` in ``repro/configs/<id>.py``
-(exact numbers from the assignment table) plus a ``smoke()`` reduction of the
-same family that runs a real forward/train step on CPU.  The paper's own
-model is an ``EinetConfig`` and flows through the same launcher/dry-run
-machinery (``--arch einet_pd``).
+Each registered architecture is one ``EinetConfig`` in
+``repro/configs/<id>.py`` with exact numbers from the paper's experiments
+(§4); ``repro.launch.cells.build_einet`` turns a config into a live model.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Tuple
-
-
-@dataclasses.dataclass(frozen=True)
-class ModelConfig:
-    name: str
-    family: str  # dense | moe | ssm | hybrid | audio | vlm
-    num_layers: int
-    d_model: int
-    num_heads: int
-    num_kv_heads: int
-    d_ff: int
-    vocab_size: int
-    # block layout: cycled pattern of mixers + which positions carry MoE
-    block_pattern: Tuple[str, ...] = ("attn",)
-    moe_pattern: Tuple[bool, ...] = (False,)
-    # MoE
-    num_experts: int = 0
-    num_experts_per_tok: int = 0
-    d_ff_expert: int = 0
-    capacity_factor: float = 1.25
-    # shard_map: explicit EP all-to-alls when a mesh is active (production);
-    # gather: sort-based pjit path (single-host / oracle); dense: GShard ref
-    moe_impl: str = "shard_map"  # shard_map | gather | dense
-    moe_aux_weight: float = 0.01
-    # attention details
-    head_dim_override: Optional[int] = None
-    qkv_bias: bool = False
-    rope_theta: float = 10_000.0
-    attn_q_chunk: int = 512
-    attn_kv_chunk: int = 1024
-    # SSM / xLSTM details
-    ssm_state_dim: int = 16
-    ssm_conv_dim: int = 4
-    ssm_expand: int = 2
-    ssm_dt_rank: Optional[int] = None
-    ssm_chunk: int = 128
-    lstm_proj_factor: float = 2.0
-    # distribution-facing knobs (set per mesh by the launcher / dry-run)
-    moe_groups: int = 1  # routing groups == DP shards; bounds expert capacity
-    loss_chunk: int = 512  # sequence chunk for the vocab-parallel CE loss
-    # misc
-    activation: str = "swiglu"  # swiglu | squared_relu | gelu
-    norm_eps: float = 1e-5
-    embedding_input: bool = False  # audio/vlm: frontend stub feeds embeddings
-    dtype: str = "bfloat16"
-
-    def __post_init__(self):
-        assert self.num_layers % len(self.block_pattern) == 0, (
-            f"{self.name}: num_layers {self.num_layers} must be a multiple of "
-            f"the block pattern length {len(self.block_pattern)}"
-        )
-        assert len(self.moe_pattern) == len(self.block_pattern)
-
-    @property
-    def head_dim(self) -> int:
-        return self.head_dim_override or self.d_model // self.num_heads
-
-    @property
-    def padded_vocab(self) -> int:
-        """Vocab padded to a 128 multiple: MXU lane alignment + TP
-        divisibility for embedding/head storage (logits over the padded
-        columns stay in the softmax, exactly like production frameworks;
-        ``forward`` slices them off for the eval API)."""
-        return -(-self.vocab_size // 128) * 128
-
-    @property
-    def num_periods(self) -> int:
-        return self.num_layers // len(self.block_pattern)
-
-    def has_ffn(self, pos: int) -> bool:
-        return bool(self.moe_pattern[pos]) or self.d_ff > 0
-
-    def param_count(self) -> int:
-        """Analytic parameter count (for MODEL_FLOPS in the roofline)."""
-        d, dh = self.d_model, self.head_dim
-        total = 0 if self.embedding_input else self.vocab_size * d
-        total += d * self.vocab_size  # head
-        for pos, kind in enumerate(self.block_pattern):
-            n = self.num_periods
-            if kind == "attn":
-                total += n * d * dh * (self.num_heads * 2 + self.num_kv_heads * 2)
-            elif kind == "mamba":
-                e = self.ssm_expand * d
-                dtr = self.ssm_dt_rank or max(d // 16, 1)
-                total += n * (
-                    d * 2 * e + e * (dtr + 2 * self.ssm_state_dim)
-                    + dtr * e + e * self.ssm_state_dim + e * d
-                )
-            elif kind == "mlstm":
-                e = int(self.lstm_proj_factor * d)
-                total += n * (d * 2 * e + 2 * e * e + e * d)
-            elif kind == "slstm":
-                total += n * (d * 4 * d + 4 * d * (d // self.num_heads))
-            if self.moe_pattern[pos]:
-                f = self.d_ff_expert or self.d_ff
-                total += n * self.num_experts * 3 * d * f
-            elif self.d_ff > 0:
-                mult = 3 if self.activation == "swiglu" else 2
-                total += n * mult * d * self.d_ff
-        return total
-
-    def active_param_count(self) -> int:
-        """Per-token active parameters (MoE: top-k of the experts)."""
-        if self.num_experts == 0:
-            return self.param_count()
-        d = self.d_model
-        f = self.d_ff_expert or self.d_ff
-        n_moe = sum(
-            self.num_periods for pos in range(len(self.block_pattern))
-            if self.moe_pattern[pos]
-        )
-        inactive = n_moe * (self.num_experts - self.num_experts_per_tok) * 3 * d * f
-        return self.param_count() - inactive
+from typing import Tuple
 
 
 @dataclasses.dataclass(frozen=True)
 class EinetConfig:
-    """The paper's own architecture as a peer config (``--arch einet_*``)."""
+    """One EiNet experiment cell (``--arch einet_*``)."""
 
     name: str
     family: str = "einet"
@@ -151,63 +36,3 @@ class EinetConfig:
     min_var: float = 1e-6
     max_var: float = 10.0
     batch_size: int = 512
-
-
-@dataclasses.dataclass(frozen=True)
-class ShapeSpec:
-    name: str
-    kind: str  # train | prefill | decode
-    seq_len: int
-    global_batch: int
-
-
-SHAPES: Tuple[ShapeSpec, ...] = (
-    ShapeSpec("train_4k", "train", 4_096, 256),
-    ShapeSpec("prefill_32k", "prefill", 32_768, 32),
-    ShapeSpec("decode_32k", "decode", 32_768, 128),
-    ShapeSpec("long_500k", "decode", 524_288, 1),
-)
-
-SHAPES_BY_NAME: Dict[str, ShapeSpec] = {s.name: s for s in SHAPES}
-
-# families whose per-token state is O(1)-ish: long-context decode is runnable
-_SUBQUADRATIC = ("ssm", "hybrid")
-
-
-def applicable(cfg, shape: ShapeSpec) -> Tuple[bool, str]:
-    """Whether a (config, shape) cell runs; reason when skipped (DESIGN.md §5)."""
-    if isinstance(cfg, EinetConfig):
-        # the EiNet has no KV cache / decode loop: train + single query shapes
-        if shape.kind == "train":
-            return True, ""
-        return False, "EiNet: no autoregressive decode; LL queries only"
-    if shape.name == "long_500k" and cfg.family not in _SUBQUADRATIC:
-        return False, "pure full-attention arch: 500k decode skipped (DESIGN.md §5)"
-    return True, ""
-
-
-def smoke_variant(cfg: ModelConfig) -> ModelConfig:
-    """Reduced same-family config for CPU smoke tests."""
-    pat = cfg.block_pattern
-    heads = max(2, min(cfg.num_heads, 4))
-    kv = heads if cfg.num_kv_heads == cfg.num_heads else max(1, heads // 2)
-    return dataclasses.replace(
-        cfg,
-        name=cfg.name + "-smoke",
-        num_layers=len(pat) * 2,
-        d_model=64,
-        num_heads=heads,
-        num_kv_heads=kv,
-        head_dim_override=64 // heads,
-        d_ff=128 if cfg.d_ff > 0 else 0,
-        d_ff_expert=96 if cfg.num_experts else 0,
-        vocab_size=128,
-        num_experts=min(cfg.num_experts, 4),
-        num_experts_per_tok=min(cfg.num_experts_per_tok, 2),
-        ssm_state_dim=8,
-        ssm_dt_rank=8,
-        ssm_chunk=16,
-        attn_q_chunk=16,
-        attn_kv_chunk=16,
-        dtype="float32",
-    )

@@ -54,6 +54,33 @@ def log_einsum_exp(w: jax.Array, ln_left: jax.Array, ln_right: jax.Array,
     return a + ap + jnp.log(s)
 
 
+def grouped_log_einsum_exp(ws, x, out_block: int, block_b: int = 128,
+                           impl: str = "xla"):
+    """One fused execution segment: a run of consecutive CANONICAL einsum
+    layers (left = rows [0, L), right = rows [L, 2L) of the layer below),
+    applied bottom-up to ``x`` (B, 2 * L_first, K).
+
+    With ``impl == "pallas"`` the whole run is ONE kernel launch
+    (``repro.kernels.grouped``): intermediate log-activations live in VMEM
+    and never round-trip HBM.  Other impls execute the run as the chained
+    per-depth op -- computationally identical to the per-layer loop (same
+    einsum per depth, same order), so grouped XLA execution is bit-exact
+    against the per-layer path by construction.
+
+    Returns (B, L_last, K_out_last).
+    """
+    if impl == "pallas":
+        from repro.kernels import ops as _kops
+
+        return _kops.grouped_log_einsum_exp(out_block, block_b, tuple(ws), x)
+    cur = x
+    for w in ws:
+        half = w.shape[0]
+        cur = log_einsum_exp(w, cur[:, :half], cur[:, half: 2 * half],
+                             impl=impl)
+    return cur
+
+
 # Floor for the stabilized sum when dividing the backward cotangent: must be
 # a NORMAL float32 (XLA flushes subnormals to zero -- a 1e-38 floor becomes
 # g / 0 = inf on fully-saturated rows).  Same contract as the fused

@@ -15,8 +15,6 @@ from typing import Callable, Dict, Iterator, Optional
 
 import numpy as np
 
-from repro.data import synthetic
-
 
 class ShardedLoader:
     """Deterministic per-host loader.
@@ -89,19 +87,3 @@ class ShardedLoader:
         self._stop.set()
         if self._thread is not None:
             self._thread.join(timeout=2.0)
-
-
-def lm_loader(cfg, shape, num_shards=1, shard_id=0, start_step=0, seed=0):
-    """Loader for an LM (config, shape) cell."""
-
-    def make(step, shard, n):
-        b = synthetic.token_batch(step, shard, n, shape.seq_len, cfg.vocab_size, seed)
-        if cfg.embedding_input:
-            rng = np.random.RandomState((seed + step * 17 + shard) % 2**31)
-            emb = rng.randn(n, shape.seq_len, cfg.d_model).astype(np.float32) * 0.02
-            return {"inputs_embeds": emb, "labels": b["labels"]}
-        return b
-
-    return ShardedLoader(
-        make, shape.global_batch, num_shards, shard_id, start_step
-    )

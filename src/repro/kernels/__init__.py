@@ -1,16 +1,24 @@
-"""Pallas TPU kernels for the performance hot-spots (+ jnp oracles).
+"""Pallas TPU kernels for the EiNet hot-spots (+ jnp oracles).
 
-  * ``log_einsum_exp`` -- the paper's core op (Eq. 4/5): fused max/exp/matmul/log.
-  * ``flash_attention`` -- online-softmax attention for the LM substrate.
+  * ``log_einsum_exp`` -- the paper's core op (Eq. 4/5): fused
+    max/exp/matmul/log, one (product, sum) pair per launch.
+  * ``grouped_log_einsum_exp`` -- the whole-subcircuit form: a run of
+    consecutive canonical pairs fused into ONE launch, intermediate
+    log-activations resident in VMEM (``grouped.py``).
 
-Kernels run compiled on TPU and in interpret mode on CPU; ``ref.py`` holds the
-pure-jnp oracles that define their semantics.
+Kernels run compiled on TPU and in interpret mode on CPU; ``ref.py`` holds
+the pure-jnp oracles that define their semantics.
 """
 
-from repro.kernels import dispatch, ops, ref
-from repro.kernels.ops import flash_attention, log_einsum_exp, pad_for_lanes
+from repro.kernels import dispatch, grouped, ops, ref
+from repro.kernels.ops import (
+    grouped_log_einsum_exp,
+    log_einsum_exp,
+    pad_for_lanes,
+    pad_group_for_lanes,
+)
 
 __all__ = [
-    "dispatch", "ops", "ref", "flash_attention", "log_einsum_exp",
-    "pad_for_lanes",
+    "dispatch", "grouped", "ops", "ref", "grouped_log_einsum_exp",
+    "log_einsum_exp", "pad_for_lanes", "pad_group_for_lanes",
 ]

@@ -1,0 +1,367 @@
+"""Depth-grouped (whole-subcircuit) log-einsum-exp Pallas kernels.
+
+``log_einsum_exp.py`` runs ONE (product, sum) pair per ``pallas_call``: every
+depth of the circuit is a separate kernel launch and its log-activations make
+a full HBM round-trip between launches.  This module fuses a RUN of
+consecutive *canonical* pairs (left = rows [0, L), right = rows [L, 2L) of
+the layer below -- the static-slice layout ``EiNet._canonicalize`` produces
+for RAT-style structures) into a single kernel whose intermediate
+activations never leave VMEM: the PyJuice-style "compile the DAG into a few
+block-parallel kernels" execution model, restated for the TPU memory
+hierarchy.
+
+The key observation that makes deep fusion fit in VMEM is that a canonical
+run is a forest of complete binary trees over the group's OUTPUT cells: the
+set of depth-``g`` cells needed to produce output cells ``[t*s, (t+1)*s)``
+is ``{c + m * L_out : c in [t*s, (t+1)*s), m < L_g / L_out}`` -- a regular
+strided family.  Reshaping every operand from ``(L_g, ...)`` to
+``(L_g / L_out, L_out, ...)`` turns that family into a rectangular block, so
+a plain ``BlockSpec`` over the second axis tiles the whole subtree:
+
+  * grid = (L_out / s, B / B_t): each program computes ``s`` output cells of
+    the final depth for one batch tile, walking all ``G`` depths locally.
+    In block coordinates every depth is still the canonical split -- inputs
+    ``cur[:, :M/2]`` x ``cur[:, M/2:]`` -> outputs ``(B_t, M/2, s, K_out)``.
+  * Each weight / input cell is read by EXACTLY ONE program (the trees are
+    disjoint): fusion adds zero redundant HBM traffic, and shrinking ``s``
+    shrinks the per-program working set proportionally, so the VMEM planner
+    (``EiNet._plan_groups``) can fuse arbitrarily wide depths by tiling the
+    output cells instead of giving up.
+  * Per cell the contraction is the SAME ``(B_t, K^2) @ (K^2, K_out)`` MXU
+    dot as the per-layer kernel (identical operands, identical op), so the
+    fused forward is bit-identical to the per-layer Pallas path wherever the
+    padding contracts agree, and its gradients match autodiff of the chained
+    reference to float32 roundoff.
+
+Padding contract (``ops.pad_group_for_lanes``): K is rounded up to a
+multiple of 16 exactly as in ``pad_for_lanes``; INTERIOR depths pad K_out to
+the same padded K (their outputs are the next depth's inputs), and padded
+weight rows are zero, so padded output lanes compute ``log(0) = -inf`` --
+precisely the -inf padding the next depth's inputs require.  Only the final
+depth pads K_out to a full 128 lane like the per-layer kernel.
+
+The backward kernel follows the per-layer residual-recompute VJP contract:
+it re-derives every depth's activations in VMEM from the (unpadded-then-
+repadded) group inputs, walks the depths in reverse emitting ``dW`` (batch
+tiles accumulate by revisiting the same block; batch is the innermost,
+sequential grid axis) and the input cotangent, with the stabilized sum
+recomputed by the forward's exact contraction.
+
+Validated against autodiff of the chained XLA reference in interpret mode --
+see ``tests/test_grouped.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.layers import NEG_INF
+from repro.kernels.dispatch import resolve_interpret
+
+# same stabilized-sum floor as the per-layer backward kernel (a NORMAL
+# float32: XLA flushes subnormals, and g / 0 on saturated rows must not inf)
+_S_FLOOR = 1e-30
+
+
+def _depth_fwd(w, cur):
+    """One canonical depth inside the kernel, in block coordinates.
+
+    w:   (M/2, s, K_out, K, K) weight block.
+    cur: (B_t, M, s, K) log-activations; left children are rows [0, M/2),
+         right children rows [M/2, M) (the canonical split).
+    Returns (B_t, M/2, s, K_out).
+    """
+    bb, m, s_, k = cur.shape
+    h = m // 2
+    ko = w.shape[2]
+    lnl, lnr = cur[:, :h], cur[:, h:]
+    # the per-layer kernel's exact stabilization, per (m, c) cell row
+    a = jnp.maximum(jnp.max(lnl, axis=-1, keepdims=True), NEG_INF)
+    ap = jnp.maximum(jnp.max(lnr, axis=-1, keepdims=True), NEG_INF)
+    el = jnp.exp(lnl - a)
+    er = jnp.exp(lnr - ap)
+    cols = []
+    for mi in range(h):
+        row = []
+        for ci in range(s_):
+            # outer product in VMEM, then the per-layer kernel's exact
+            # (B_t, K^2) @ (K^2, K_out) MXU contraction per cell
+            prod = (el[:, mi, ci, :, None] * er[:, mi, ci, None, :]).reshape(
+                bb, k * k
+            )
+            wmat = w[mi, ci].reshape(ko, k * k)
+            s = jnp.dot(prod, wmat.T, preferred_element_type=jnp.float32)
+            row.append(a[:, mi, ci] + ap[:, mi, ci] + jnp.log(s))
+        cols.append(jnp.stack(row, axis=1))  # (B_t, s, K_out)
+    return jnp.stack(cols, axis=1)  # (B_t, M/2, s, K_out)
+
+
+def _depth_bwd(w, cur, gout):
+    """Backward of one canonical depth, in block coordinates.
+
+    gout: (B_t, M/2, s, K_out) cotangent of this depth's outputs.
+    Returns (gw (M/2, s, K_out, K, K), gin (B_t, M, s, K)).
+    """
+    bb, m, s_, k = cur.shape
+    h = m // 2
+    ko = w.shape[2]
+    lnl, lnr = cur[:, :h], cur[:, h:]
+    a = jnp.maximum(jnp.max(lnl, axis=-1, keepdims=True), NEG_INF)
+    ap = jnp.maximum(jnp.max(lnr, axis=-1, keepdims=True), NEG_INF)
+    el = jnp.exp(lnl - a)
+    er = jnp.exp(lnr - ap)
+    gw_cols, gl_cols, gr_cols = [], [], []
+    for mi in range(h):
+        gw_row, gl_row, gr_row = [], [], []
+        for ci in range(s_):
+            eli, eri = el[:, mi, ci], er[:, mi, ci]  # (B_t, K)
+            prod = (eli[:, :, None] * eri[:, None, :]).reshape(bb, k * k)
+            wmat = w[mi, ci].reshape(ko, k * k)
+            # forward's stabilized sum, recomputed with the forward's exact
+            # contraction (same operands, same op -> bit-identical frame)
+            s = jnp.dot(prod, wmat.T, preferred_element_type=jnp.float32)
+            ginv = gout[:, mi, ci] / jnp.maximum(s, _S_FLOOR)  # (B_t, K_out)
+            gw_row.append(
+                jax.lax.dot_general(
+                    ginv, prod, (((0,), (0,)), ((), ())),
+                    preferred_element_type=jnp.float32,
+                ).reshape(ko, k, k)
+            )
+            c = jnp.dot(ginv, wmat, preferred_element_type=jnp.float32)
+            c = c.reshape(bb, k, k)
+            gl_row.append(eli * jnp.sum(c * eri[:, None, :], axis=2))
+            gr_row.append(eri * jnp.sum(c * eli[:, :, None], axis=1))
+        gw_cols.append(jnp.stack(gw_row, axis=0))  # (s, K_out, K, K)
+        gl_cols.append(jnp.stack(gl_row, axis=1))  # (B_t, s, K)
+        gr_cols.append(jnp.stack(gr_row, axis=1))
+    gw = jnp.stack(gw_cols, axis=0)  # (M/2, s, K_out, K, K)
+    gin = jnp.concatenate(
+        [jnp.stack(gl_cols, axis=1), jnp.stack(gr_cols, axis=1)], axis=1
+    )  # (B_t, M, s, K)
+    return gw, gin
+
+
+def _make_fwd_kernel(num_depths: int):
+    def kernel(*refs):
+        w_refs, x_ref, o_ref = refs[:num_depths], refs[-2], refs[-1]
+        cur = x_ref[...]  # (B_t, 2^G, s, K)
+        for g in range(num_depths):
+            cur = _depth_fwd(w_refs[g][...], cur)
+        o_ref[...] = cur[:, 0].astype(o_ref.dtype)  # (B_t, s, K_out_final)
+
+    return kernel
+
+
+def _make_bwd_kernel(num_depths: int):
+    def kernel(*refs):
+        w_refs = refs[:num_depths]
+        x_ref, g_ref = refs[num_depths], refs[num_depths + 1]
+        gw_refs = refs[num_depths + 2: 2 * num_depths + 2]
+        gx_ref = refs[-1]
+        bi = pl.program_id(1)
+        # recompute every depth's activations in VMEM (residual-recompute:
+        # nothing but the group inputs was saved)
+        acts = [x_ref[...]]
+        for g in range(num_depths - 1):
+            acts.append(_depth_fwd(w_refs[g][...], acts[-1]))
+        gcur = g_ref[...][:, None]  # (B_t, 1, s, K_out_final)
+        for g in reversed(range(num_depths)):
+            gw_g, gcur = _depth_bwd(w_refs[g][...], acts[g], gcur)
+            gw_ref = gw_refs[g]
+
+            # batch tiles revisit the same dW block: init then accumulate
+            # (batch is the innermost, sequential grid axis)
+            @pl.when(bi == 0)
+            def _init(gw_ref=gw_ref, gw_g=gw_g):
+                gw_ref[...] = gw_g.astype(gw_ref.dtype)
+
+            @pl.when(bi > 0)
+            def _acc(gw_ref=gw_ref, gw_g=gw_g):
+                gw_ref[...] += gw_g.astype(gw_ref.dtype)
+
+        gx_ref[...] = gcur.astype(gx_ref.dtype)
+
+    return kernel
+
+
+def _pad_batch(block_b, *arrays):
+    b = arrays[0].shape[0]
+    pad_b = (-b) % block_b
+    if not pad_b:
+        return arrays
+    return tuple(
+        jnp.concatenate([x, jnp.zeros((pad_b,) + x.shape[1:], x.dtype)], 0)
+        for x in arrays
+    )
+
+
+def _group_geometry(ws: Sequence[jax.Array], x: jax.Array):
+    """Validate the canonical-run shapes and return (G, L_out, K, K_final)."""
+    g = len(ws)
+    b, rows, k = x.shape
+    l_out = ws[-1].shape[0]
+    if rows != l_out * 2 ** g:
+        raise ValueError(
+            f"group input has {rows} rows; a {g}-depth canonical run over "
+            f"{l_out} output cells needs {l_out * 2 ** g}"
+        )
+    for d, w in enumerate(ws):
+        if w.shape[0] != l_out * 2 ** (g - 1 - d):
+            raise ValueError(
+                f"depth {d} has {w.shape[0]} cells, expected "
+                f"{l_out * 2 ** (g - 1 - d)} (canonical halving)"
+            )
+        if w.shape[-1] != k or w.shape[-2] != k:
+            raise ValueError(f"depth {d} weight K {w.shape[-2:]} != input K {k}")
+        if d < g - 1 and w.shape[1] != k:
+            raise ValueError(
+                f"interior depth {d} K_out {w.shape[1]} != K {k}; interior "
+                "outputs feed the next depth so K_out must equal K"
+            )
+    return g, l_out, k, ws[-1].shape[1]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("out_block", "block_b", "interpret")
+)
+def grouped_log_einsum_exp_pallas(
+    ws: Tuple[jax.Array, ...],
+    x: jax.Array,
+    out_block: int = 1,
+    block_b: int = 128,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Fused multi-depth forward: one kernel launch for a canonical run.
+
+    Args:
+      ws: per-depth linear-domain weights, input side first; depth ``d`` has
+        shape (L_out * 2^(G-1-d), K_out_d, K, K) with K_out_d == K for every
+        interior depth (padded per ``ops.pad_group_for_lanes``).
+      x: (B, L_out * 2^G, K) log-domain inputs of the first depth (left
+        children rows [0, L_0), right children rows [L_0, 2 L_0)).
+      out_block: output cells per program (``s``); must divide L_out.  The
+        VMEM knob: each program's working set is the s / L_out fraction of
+        the whole group.
+      block_b: batch tile.
+      interpret: None defers to backend dispatch (compiled on TPU, interpret
+        elsewhere); an explicit bool pins the mode.
+
+    Returns: (B, L_out, K_out_final) float32.
+    """
+    interpret = resolve_interpret(interpret)
+    g, l_out, k, k_final = _group_geometry(ws, x)
+    if l_out % out_block:
+        raise ValueError(f"out_block {out_block} does not divide L_out {l_out}")
+    b = x.shape[0]
+    block_b = min(block_b, b)
+    (x,) = _pad_batch(block_b, x)
+    bp = x.shape[0]
+    s = out_block
+    grid = (l_out // s, bp // block_b)
+    x_r = x.reshape(bp, 2 ** g, l_out, k)
+    w_r = [
+        w.reshape(2 ** (g - 1 - d), l_out, w.shape[1], k, k)
+        for d, w in enumerate(ws)
+    ]
+    in_specs = [
+        pl.BlockSpec(
+            (2 ** (g - 1 - d), s, w_r[d].shape[2], k, k),
+            lambda ti, bi: (0, ti, 0, 0, 0),
+        )
+        for d in range(g)
+    ] + [pl.BlockSpec((block_b, 2 ** g, s, k), lambda ti, bi: (bi, 0, ti, 0))]
+    out = pl.pallas_call(
+        _make_fwd_kernel(g),
+        out_shape=jax.ShapeDtypeStruct((bp, l_out, k_final), jnp.float32),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec(
+            (block_b, s, k_final), lambda ti, bi: (bi, ti, 0)
+        ),
+        interpret=interpret,
+    )(*w_r, x_r)
+    return out[:b] if bp != b else out
+
+
+@functools.partial(
+    jax.jit, static_argnames=("out_block", "block_b", "interpret")
+)
+def grouped_log_einsum_exp_bwd_pallas(
+    ws: Tuple[jax.Array, ...],
+    x: jax.Array,
+    g_out: jax.Array,
+    out_block: int = 1,
+    block_b: int = 128,
+    interpret: Optional[bool] = None,
+):
+    """Fused multi-depth backward: dW for every depth + the input cotangent,
+    one kernel launch.
+
+    Args:
+      ws / x / out_block / block_b / interpret: as in the forward (residuals
+        are the unpadded primals; the caller re-pads).
+      g_out: (B, L_out, K_out_final) cotangent of the group output.
+
+    Returns: (gws tuple matching ``ws`` shapes, gx (B, L_out * 2^G, K)).
+    """
+    interpret = resolve_interpret(interpret)
+    g, l_out, k, k_final = _group_geometry(ws, x)
+    if l_out % out_block:
+        raise ValueError(f"out_block {out_block} does not divide L_out {l_out}")
+    b = x.shape[0]
+    block_b = min(block_b, b)
+    x, g_out = _pad_batch(block_b, x, g_out)
+    bp = x.shape[0]
+    s = out_block
+    grid = (l_out // s, bp // block_b)
+    x_r = x.reshape(bp, 2 ** g, l_out, k)
+    w_r = [
+        w.reshape(2 ** (g - 1 - d), l_out, w.shape[1], k, k)
+        for d, w in enumerate(ws)
+    ]
+    in_specs = [
+        pl.BlockSpec(
+            (2 ** (g - 1 - d), s, w_r[d].shape[2], k, k),
+            lambda ti, bi: (0, ti, 0, 0, 0),
+        )
+        for d in range(g)
+    ] + [
+        pl.BlockSpec((block_b, 2 ** g, s, k), lambda ti, bi: (bi, 0, ti, 0)),
+        pl.BlockSpec((block_b, s, k_final), lambda ti, bi: (bi, ti, 0)),
+    ]
+    # dW blocks are (M/2, s, K_out, K, K) in (m, c)-major layout: block
+    # index depends on ti only, so batch tiles (innermost axis) revisit and
+    # accumulate into the same block
+    gw_shapes = tuple(
+        jax.ShapeDtypeStruct(
+            (2 ** (g - 1 - d), l_out, w_r[d].shape[2], k, k), jnp.float32
+        )
+        for d in range(g)
+    )
+    gw_specs = tuple(
+        pl.BlockSpec(
+            (2 ** (g - 1 - d), s, w_r[d].shape[2], k, k),
+            lambda ti, bi: (0, ti, 0, 0, 0),
+        )
+        for d in range(g)
+    )
+    outs = pl.pallas_call(
+        _make_bwd_kernel(g),
+        out_shape=gw_shapes
+        + (jax.ShapeDtypeStruct((bp, 2 ** g, l_out, k), jnp.float32),),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=gw_specs
+        + (pl.BlockSpec((block_b, 2 ** g, s, k), lambda ti, bi: (bi, 0, ti, 0)),),
+        interpret=interpret,
+    )(*w_r, x_r, g_out)
+    gws = tuple(
+        gw.reshape(w.shape[0], w.shape[1], k, k) for gw, w in zip(outs[:g], ws)
+    )
+    gx = outs[g].reshape(bp, l_out * 2 ** g, k)
+    return gws, gx[:b] if bp != b else gx

@@ -14,17 +14,27 @@ directions share one exact-padding contract (``pad_for_lanes``): K rounded
 up to a multiple of 16, K_out to a 128 lane, padded ln entries -inf, padded
 weights and cotangents 0, so padding changes no contraction bit-exactly and
 gradients of padded lanes are identically zero.
+
+``grouped_log_einsum_exp`` is the whole-subcircuit form (``grouped.py``):
+one custom-VJP op covering a RUN of consecutive canonical depths, with the
+same residual-recompute contract extended group-wide
+(``pad_group_for_lanes``); it is what ``EiNet`` dispatches fused execution
+segments to when ``impl == "pallas"``.
 """
 
 from __future__ import annotations
 
-from typing import Optional
+import functools
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref as _ref
-from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.grouped import (
+    grouped_log_einsum_exp_bwd_pallas,
+    grouped_log_einsum_exp_pallas,
+)
 from repro.kernels.log_einsum_exp import (
     log_einsum_exp_bwd_pallas,
     log_einsum_exp_pallas,
@@ -92,34 +102,92 @@ log_einsum_exp.defvjp(_lee_fwd, _lee_bwd)
 
 
 # --------------------------------------------------------------------------
-# flash attention (GQA-aware wrapper)
+# grouped log-einsum-exp: one op per fused execution segment (custom VJP)
 # --------------------------------------------------------------------------
-def flash_attention(
-    q: jax.Array,
-    k: jax.Array,
-    v: jax.Array,
-    causal: bool = True,
-    scale: Optional[float] = None,
-    block_q: int = 128,
-    block_k: int = 128,
-) -> jax.Array:
-    """q: (B, Hq, Sq, Dh); k, v: (B, Hkv, Sk, Dh).  Returns (B, Hq, Sq, Dh)."""
-    b, hq, sq, dh = q.shape
-    hkv = k.shape[1]
-    group = hq // hkv
-    if group > 1:
-        k = jnp.repeat(k, group, axis=1)
-        v = jnp.repeat(v, group, axis=1)
-    qf = q.reshape(b * hq, sq, dh)
-    kf = k.reshape(b * hq, -1, dh)
-    vf = v.reshape(b * hq, -1, dh)
-    out = flash_attention_pallas(
-        qf, kf, vf, causal=causal, scale=scale, block_q=block_q,
-        block_k=block_k,
+def pad_group_for_lanes(ws, x, g_out=None):
+    """``pad_for_lanes`` extended to a canonical run of depths.
+
+    K pads to a multiple of 16 with -inf input lanes / zero weights, exactly
+    as in the per-layer contract.  INTERIOR depths pad K_out to the padded K
+    (their outputs are the next depth's inputs): padded weight rows are
+    zero, so padded output lanes evaluate ``a + a' + log(0) = -inf`` inside
+    the kernel -- precisely the -inf padding the next depth's input lanes
+    need, making group padding self-consistent with no per-depth fixups.
+    Only the final depth pads K_out to a full 128 lane; ``g_out`` (the
+    backward cotangent) zero-pads on that lane.
+    """
+    k = ws[0].shape[-1]
+    k_p = -(-k // 16) * 16
+    ws_p = []
+    for d, w in enumerate(ws):
+        ko = w.shape[1]
+        ko_p = k_p if d < len(ws) - 1 else -(-ko // 128) * 128
+        ws_p.append(
+            jnp.pad(w, ((0, 0), (0, ko_p - ko), (0, k_p - k), (0, k_p - k)))
+            if (ko_p, k_p) != (ko, k) else w
+        )
+    x_p = (
+        jnp.pad(x, ((0, 0), (0, 0), (0, k_p - k)), constant_values=-jnp.inf)
+        if k_p != k else x
     )
-    return out.reshape(b, hq, sq, dh)
+    if g_out is None:
+        return tuple(ws_p), x_p
+    ko = ws[-1].shape[1]
+    ko_p = -(-ko // 128) * 128
+    g_p = (
+        jnp.pad(g_out, ((0, 0), (0, 0), (0, ko_p - ko)))
+        if ko_p != ko else g_out
+    )
+    return tuple(ws_p), x_p, g_p
 
 
-# re-export oracles for convenience
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def grouped_log_einsum_exp(
+    out_block: int,
+    block_b: int,
+    ws: Tuple[jax.Array, ...],
+    x: jax.Array,
+) -> jax.Array:
+    """Whole-subcircuit log-einsum-exp over a canonical depth run.
+
+    Args:
+      out_block / block_b: static tiling (chosen by ``EiNet._plan_groups``).
+      ws: per-depth unpadded weights, input side first; depth ``d`` is
+        (L_out * 2^(G-1-d), K_out_d, K, K), interior K_out_d == K.
+      x: (B, L_out * 2^G, K) log-domain first-depth inputs.
+
+    Returns: (B, L_out, K_out_final) log-domain outputs of the last depth.
+    """
+    k_final = ws[-1].shape[1]
+    wp, xp = pad_group_for_lanes(ws, x)
+    out = grouped_log_einsum_exp_pallas(
+        wp, xp, out_block=out_block, block_b=block_b
+    )
+    return out[..., :k_final]
+
+
+def _glee_fwd(out_block, block_b, ws, x):
+    out = grouped_log_einsum_exp(out_block, block_b, ws, x)
+    # same residual contract as the per-layer op: save the unpadded primals,
+    # re-pad in the backward, recompute every depth's frame in VMEM
+    return out, (tuple(ws), x)
+
+
+def _glee_bwd(out_block, block_b, res, g):
+    ws, x = res
+    k = x.shape[-1]
+    wp, xp, gp = pad_group_for_lanes(ws, x, g)
+    gws, gx = grouped_log_einsum_exp_bwd_pallas(
+        wp, xp, gp, out_block=out_block, block_b=block_b
+    )
+    gws = tuple(
+        gw[:, : w.shape[1], :k, :k] for gw, w in zip(gws, ws)
+    )
+    return gws, gx[..., :k]
+
+
+grouped_log_einsum_exp.defvjp(_glee_fwd, _glee_bwd)
+
+
+# re-export the oracle for convenience
 log_einsum_exp_ref = _ref.log_einsum_exp_ref
-mha_ref = _ref.mha_ref

@@ -7,8 +7,6 @@ XLA fallback paths used on non-TPU backends.
 
 from __future__ import annotations
 
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 
@@ -28,36 +26,6 @@ def log_einsum_exp_ref(w: jax.Array, ln_left: jax.Array,
     er = jnp.exp(ln_right - ap)
     s = jnp.einsum("lkij,bli,blj->blk", w, el, er)
     return a + ap + jnp.log(s)
-
-
-def mha_ref(
-    q: jax.Array,
-    k: jax.Array,
-    v: jax.Array,
-    causal: bool = True,
-    scale: Optional[float] = None,
-) -> jax.Array:
-    """Naive multi-head attention oracle.
-
-    q: (B, Hq, Sq, Dh); k, v: (B, Hkv, Sk, Dh) with Hq % Hkv == 0 (GQA).
-    Returns (B, Hq, Sq, Dh).
-    """
-    b, hq, sq, dh = q.shape
-    hkv, sk = k.shape[1], k.shape[2]
-    if scale is None:
-        scale = dh**-0.5
-    group = hq // hkv
-    k = jnp.repeat(k, group, axis=1)
-    v = jnp.repeat(v, group, axis=1)
-    s = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
-    if causal:
-        # decode-style offset: query block sits at the END of the kv sequence
-        offset = sk - sq
-        rows = jnp.arange(sq)[:, None] + offset
-        cols = jnp.arange(sk)[None, :]
-        s = jnp.where(cols <= rows, s, NEG_INF)
-    p = jax.nn.softmax(s, axis=-1)
-    return jnp.einsum("bhqk,bhkd->bhqd", p, v)
 
 
 def log_mix_exp_ref(v: jax.Array, ln: jax.Array, mask: jax.Array) -> jax.Array:

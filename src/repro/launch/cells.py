@@ -1,168 +1,33 @@
 """Cell construction shared by the dry-run, train and serve drivers:
-input specs, lowering per (config, shape, mesh), cache shardings.
+input specs, model build, lowering per (config, mesh).
 
 Importable WITHOUT touching jax device state (unlike launch.dryrun, whose
 first lines force 512 host devices -- that module is only for the dry-run
 process itself).
 """
 
-import dataclasses
 import time
 from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.configs import EinetConfig, ModelConfig
+from repro.configs import EinetConfig
 from repro.core import EiNet, Normal, poon_domingos, random_binary_trees
 from repro.core.exponential_family import make_exponential_family
 from repro.core.em import EMConfig, stochastic_em_update
 from repro.dist import sharding as shlib
-from repro.launch.mesh import dp_shards
-from repro.models import lm
-from repro.optim import adamw
 
 
 def _sds(shape, dtype):
     return jax.ShapeDtypeStruct(shape, dtype)
 
 
-def input_specs(cfg, shape_spec) -> Dict[str, Any]:
+def input_specs(cfg: EinetConfig, shape_spec=None) -> Dict[str, Any]:
     """ShapeDtypeStruct stand-ins for every model input of a cell."""
-    if isinstance(cfg, EinetConfig):
-        d = (cfg.height * cfg.width * cfg.num_channels
-             if cfg.structure == "pd" else cfg.num_vars)
-        return {"x": _sds((cfg.batch_size, d), jnp.float32)}
-    b, s = shape_spec.global_batch, shape_spec.seq_len
-    kind = shape_spec.kind
-    if kind == "train":
-        if cfg.embedding_input:
-            return {
-                "inputs_embeds": _sds((b, s, cfg.d_model), jnp.bfloat16),
-                "labels": _sds((b, s), jnp.int32),
-            }
-        return {
-            "tokens": _sds((b, s), jnp.int32),
-            "labels": _sds((b, s), jnp.int32),
-        }
-    if kind == "prefill":
-        if cfg.embedding_input:
-            return {"inputs_embeds": _sds((b, s, cfg.d_model), jnp.bfloat16)}
-        return {"tokens": _sds((b, s), jnp.int32)}
-    # decode: one new token against a seq_len cache
-    if cfg.embedding_input:
-        return {"inputs_embeds": _sds((b, 1, cfg.d_model), jnp.bfloat16)}
-    return {"tokens": _sds((b, 1), jnp.int32)}
-
-
-def _use_fsdp(cfg, kind: str) -> bool:
-    if isinstance(cfg, EinetConfig):
-        return False
-    if kind == "train":
-        return cfg.param_count() > 4e9
-    return cfg.param_count() > 100e9  # serve: only the 1T cells need it
-
-
-def cache_shardings(cfg: ModelConfig, mesh, cache_struct, global_batch: int):
-    """KV/state cache shardings: batch over DP when divisible, else the
-    sequence axis (context parallelism) for the batch-1 long-context cells."""
-    dp_axes = tuple(n for n in ("pod", "data") if n in mesh.shape)
-    dp_n = dp_shards(mesh)
-    shard_batch = global_batch % dp_n == 0 and global_batch >= dp_n
-    dp = dp_axes if shard_batch else None
-
-    def leaf(path, x):
-        p = shlib._path_str(path)
-        nd = len(x.shape)
-        if p.endswith("/k") or p.endswith("/v"):  # (np, B, Hkv, S, dh)
-            # seq (not kv-heads) carries the model axis: Hkv can be smaller
-            # than the mesh, the 32k cache seq dim never is
-            if shard_batch:
-                return NamedSharding(mesh, P(None, dp, None, "model", None))
-            return NamedSharding(
-                mesh, P(None, None, None, dp_axes + ("model",), None)
-            )
-        if "/conv" in p:  # (np, B, K-1, E)
-            return NamedSharding(mesh, P(None, dp if shard_batch else None,
-                                         None, "model"))
-        if p.endswith("/h") and nd == 4 and x.shape[-1] == cfg.ssm_state_dim:
-            # mamba state (np, B, E, N)
-            return NamedSharding(mesh, P(None, dp if shard_batch else None,
-                                         "model", None))
-        if shard_batch and nd >= 2:
-            return NamedSharding(mesh, P(None, dp) + (None,) * (nd - 2))
-        return NamedSharding(mesh, P())
-
-    return jax.tree_util.tree_map_with_path(leaf, cache_struct)
-
-
-def lower_lm_cell(cfg: ModelConfig, shape_spec, mesh, multi_pod: bool):
-    dp_n = dp_shards(mesh)
-    kind = shape_spec.kind
-    fsdp = _use_fsdp(cfg, kind)
-    rules = shlib.default_rules(multi_pod, fsdp=fsdp)
-    if kind == "decode":
-        rules["seq"] = None  # no SP for single-token steps
-    b = shape_spec.global_batch
-    if b % dp_n:  # batch-1 long-context: replicate batch, CP the cache
-        rules["batch"] = None
-    cfg = dataclasses.replace(cfg, moe_groups=dp_n if b % dp_n == 0 else 1)
-
-    with shlib.use_rules(rules):
-        params_struct = jax.eval_shape(
-            lambda: lm.init_params(cfg, jax.random.PRNGKey(0))
-        )
-        param_sh = shlib.tree_shardings(mesh, params_struct)
-        batch_struct = input_specs(cfg, shape_spec)
-        batch_sh = shlib.batch_shardings(mesh, batch_struct) if b % dp_n == 0 \
-            else jax.tree_util.tree_map(
-                lambda x: NamedSharding(mesh, P()), batch_struct)
-        if kind == "train":
-            ocfg = adamw.AdamWConfig(
-                state_dtype="bfloat16" if cfg.param_count() > 50e9 else "float32"
-            )
-            opt_struct = jax.eval_shape(
-                lambda p: adamw.init_state(ocfg, p), params_struct
-            )
-            opt_sh = shlib.tree_shardings(mesh, opt_struct)
-
-            def fn(p, o, batch):
-                return lm.train_step(cfg, ocfg, p, o, batch)
-
-            jitted = jax.jit(
-                fn,
-                in_shardings=(param_sh, opt_sh, batch_sh),
-                out_shardings=(param_sh, opt_sh, None),
-            )
-            args = (params_struct, opt_struct, batch_struct)
-        elif kind == "prefill":
-            def fn(p, batch):
-                return lm.prefill(cfg, p, batch)
-
-            jitted = jax.jit(fn, in_shardings=(param_sh, batch_sh))
-            args = (params_struct, batch_struct)
-        else:  # decode
-            cache_struct = jax.eval_shape(
-                lambda: lm.init_cache(cfg, b, shape_spec.seq_len)
-            )
-            cache_sh = cache_shardings(cfg, mesh, cache_struct, b)
-            pos_struct = _sds((), jnp.int32)
-
-            def fn(p, batch, cache, pos):
-                return lm.decode_step(cfg, p, batch, cache, pos)
-
-            jitted = jax.jit(
-                fn,
-                in_shardings=(param_sh, batch_sh, cache_sh,
-                              NamedSharding(mesh, P())),
-                out_shardings=(None, cache_sh),
-            )
-            args = (params_struct, batch_struct, cache_struct, pos_struct)
-        t0 = time.time()
-        lowered = jitted.lower(*args)
-        t_lower = time.time() - t0
-        return lowered, t_lower
+    d = (cfg.height * cfg.width * cfg.num_channels
+         if cfg.structure == "pd" else cfg.num_vars)
+    return {"x": _sds((cfg.batch_size, d), jnp.float32)}
 
 
 def build_einet(cfg: EinetConfig) -> EiNet:
@@ -195,7 +60,7 @@ def lower_einet_cell(cfg: EinetConfig, mesh, multi_pod: bool):
             lambda: model.init(jax.random.PRNGKey(0))
         )
         param_sh = shlib.tree_shardings(mesh, params_struct)
-        batch_struct = input_specs(cfg, None)
+        batch_struct = input_specs(cfg)
         batch_sh = shlib.batch_shardings(mesh, batch_struct)
 
         def fn(p, batch):
@@ -209,5 +74,3 @@ def lower_einet_cell(cfg: EinetConfig, mesh, multi_pod: bool):
         t0 = time.time()
         lowered = jitted.lower(params_struct, batch_struct)
         return lowered, time.time() - t0, model
-
-

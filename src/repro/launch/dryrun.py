@@ -1,95 +1,53 @@
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 # ^^ MUST precede any jax import: jax locks the device count on first init.
-"""Multi-pod dry-run: lower + compile every (architecture x input shape) cell
+"""Multi-pod dry-run: lower + compile every EiNet architecture's EM-step cell
 on the production meshes, and extract the roofline inputs.
 
-For each cell this produces artifacts/dryrun/<arch>__<shape>__<mesh>.json with:
+For each cell this produces artifacts/dryrun/<arch>__em_step__<mesh>.json with:
   * cost_analysis flops / bytes accessed       (compute & memory terms)
   * memory_analysis argument/output/temp bytes (fits-in-HBM evidence)
   * per-collective byte counts parsed from the post-SPMD HLO
     (all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute)
-  * lowering/compile wall times, parameter counts
+  * lowering/compile wall times
 
 Usage:
-  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen1.5-0.5b \
-      --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --arch einet_rat --mesh single
   PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
 """
 
 import argparse
-import dataclasses
 import json
-import re
 import time
 import traceback
 from typing import Any, Dict, Optional
 
 import jax
-import jax.numpy as jnp
 import numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.configs import (
-    LM_ARCHS,
-    REGISTRY,
-    SHAPES,
-    SHAPES_BY_NAME,
-    EinetConfig,
-    ModelConfig,
-    applicable,
-    get_config,
-)
-from repro.core import EiNet, Normal, poon_domingos, random_binary_trees
-from repro.core.em import EMConfig, stochastic_em_update
-from repro.dist import sharding as shlib
+from repro.configs import REGISTRY, get_config
 from repro.launch.hlo_analysis import analyze_hlo
-from repro.launch.mesh import dp_shards, make_production_mesh
-from repro.models import lm
-from repro.optim import adamw
+from repro.launch.mesh import make_production_mesh
 
-from repro.launch.cells import (  # noqa: E402
-    _sds,
-    build_einet,
-    cache_shardings,
-    input_specs,
-    lower_einet_cell,
-    lower_lm_cell,
-)
+from repro.launch.cells import lower_einet_cell  # noqa: E402
 
 
-def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: str,
+def run_cell(arch: str, mesh_kind: str, out_dir: str,
              skip_existing: bool = True) -> Optional[Dict[str, Any]]:
     cfg = get_config(arch)
-    shape_spec = SHAPES_BY_NAME[shape_name] if shape_name else None
     multi_pod = mesh_kind == "multi"
-    tag = f"{arch}__{shape_name or 'em_step'}__{'2x16x16' if multi_pod else '16x16'}"
+    tag = f"{arch}__em_step__{'2x16x16' if multi_pod else '16x16'}"
     path = os.path.join(out_dir, tag.replace("/", "_") + ".json")
     if skip_existing and os.path.exists(path):
         print(f"[skip-cached] {tag}")
         with open(path) as f:
             return json.load(f)
-    if shape_spec is not None:
-        ok, reason = applicable(cfg, shape_spec)
-        if not ok:
-            rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
-                   "skipped": reason}
-            os.makedirs(out_dir, exist_ok=True)
-            with open(path, "w") as f:
-                json.dump(rec, f, indent=1)
-            print(f"[skip] {tag}: {reason}")
-            return rec
 
     mesh = make_production_mesh(multi_pod=multi_pod)
     print(f"[lower] {tag} ...", flush=True)
     try:
         with jax.set_mesh(mesh):
-            if isinstance(cfg, EinetConfig):
-                lowered, t_lower, model = lower_einet_cell(cfg, mesh, multi_pod)
-                pcount = None
-            else:
-                lowered, t_lower = lower_lm_cell(cfg, shape_spec, mesh, multi_pod)
-                pcount = cfg.param_count()
+            lowered, t_lower, model = lower_einet_cell(cfg, mesh, multi_pod)
             t0 = time.time()
             compiled = lowered.compile()
             t_compile = time.time() - t0
@@ -101,10 +59,10 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: str,
         corr = analyze_hlo(hlo)
         rec = {
             "arch": arch,
-            "shape": shape_name or "em_step",
+            "shape": "em_step",
             "mesh": "2x16x16" if multi_pod else "16x16",
             "num_devices": int(np.prod(list(mesh.shape.values()))),
-            "kind": shape_spec.kind if shape_spec else "train",
+            "kind": "train",
             # raw XLA aggregate (loop bodies counted once) -- kept for reference
             "xla_flops_raw": float(cost.get("flops", -1)),
             "xla_bytes_raw": float(cost.get("bytes accessed", -1)),
@@ -121,10 +79,9 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: str,
             },
             "lower_s": round(t_lower, 2),
             "compile_s": round(t_compile, 2),
-            "param_count": pcount,
-            "active_param_count": (
-                cfg.active_param_count() if isinstance(cfg, ModelConfig) else None
-            ),
+            "param_count": None,
+            "active_param_count": None,
+            "grouping": model.grouping_summary(),
             "hlo_bytes": len(hlo),
         }
         os.makedirs(out_dir, exist_ok=True)
@@ -135,7 +92,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: str,
               f"compile {t_compile:.1f}s", flush=True)
         return rec
     except Exception as e:  # noqa: BLE001 -- a failed cell is a bug; record it
-        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        rec = {"arch": arch, "shape": "em_step", "mesh": mesh_kind,
                "error": repr(e), "traceback": traceback.format_exc()}
         os.makedirs(out_dir, exist_ok=True)
         with open(path + ".err", "w") as f:
@@ -147,39 +104,23 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: str,
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
-    ap.add_argument("--shape", default=None)
     ap.add_argument("--mesh", choices=("single", "multi", "both"), default="single")
     ap.add_argument("--all", action="store_true")
-    ap.add_argument("--einet", action="store_true", help="include EiNet cells")
     ap.add_argument("--out", default="artifacts/dryrun")
     ap.add_argument("--force", action="store_true")
     args = ap.parse_args()
 
     meshes = {"single": ["single"], "multi": ["multi"],
               "both": ["single", "multi"]}[args.mesh]
-    cells = []
-    if args.all:
-        for arch in LM_ARCHS:
-            for s in SHAPES:
-                cells.append((arch, s.name))
-        if args.einet:
-            cells += [("einet_pd", None), ("einet_rat", None),
-                      ("einet_rat_large", None)]
+    if args.all or args.arch is None:
+        archs = sorted(REGISTRY)
     else:
-        archs = [args.arch] if args.arch else list(LM_ARCHS)
-        shapes = [args.shape] if args.shape else [s.name for s in SHAPES]
-        for a in archs:
-            cfga = get_config(a)
-            if isinstance(cfga, EinetConfig):
-                cells.append((a, None))
-            else:
-                for s in shapes:
-                    cells.append((a, s))
+        archs = [args.arch]
 
     failures = 0
     for mesh_kind in meshes:
-        for arch, shape in cells:
-            rec = run_cell(arch, shape, mesh_kind, args.out,
+        for arch in archs:
+            rec = run_cell(arch, mesh_kind, args.out,
                            skip_existing=not args.force)
             if rec and "error" in rec:
                 failures += 1

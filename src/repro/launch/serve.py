@@ -1,15 +1,9 @@
-"""Serving driver: batched prefill + decode against the KV/state cache, with
-continuous-batching-style slot management.
+"""Serving driver: the batched exact-inference engine (``repro.serve``).
 
-  PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b --smoke \
-      --requests 6 --max-new 12
-
-The EiNet path (``--arch einet_rat``) drives the batched exact-inference
-engine (``repro.serve``): a mixed stream of joint/marginal/conditional LL,
-sampling and MPE requests is coalesced into padded per-kind micro-batches
-and executed through the compiled-program cache; warm-up (compilation) and
-steady-state throughput are reported separately, against the direct
-one-call-at-a-time baseline.
+A mixed stream of joint/marginal/conditional LL, sampling and MPE requests
+is coalesced into padded per-kind micro-batches and executed through the
+compiled-program cache; warm-up (compilation) and steady-state throughput
+are reported separately, against the direct one-call-at-a-time baseline.
 
   PYTHONPATH=src python -m repro.launch.serve --arch einet_rat --requests 64
 """
@@ -17,60 +11,12 @@ one-call-at-a-time baseline.
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro import serve as serve_lib
-from repro.configs import EinetConfig, get_config, smoke_variant
+from repro.configs import get_config
 from repro.launch import cells as dr
-from repro.models import lm
-
-
-def serve_lm(cfg, args):
-    params = lm.init_params(cfg, jax.random.PRNGKey(0))
-    rng = np.random.RandomState(0)
-    max_len = args.prompt_len + args.max_new
-    prefill = jax.jit(lambda p, b: lm.prefill(cfg, p, b, max_len=max_len))
-    decode = jax.jit(lm.decode_step, static_argnums=0)
-
-    # batch of requests (continuous batching: one shared cache, slot = row)
-    if cfg.embedding_input:
-        prompts = {"inputs_embeds": jnp.asarray(
-            rng.randn(args.requests, args.prompt_len, cfg.d_model), jnp.float32) * 0.1}
-    else:
-        prompts = {"tokens": jnp.asarray(
-            rng.randint(0, cfg.vocab_size, (args.requests, args.prompt_len)))}
-    t0 = time.time()
-    logits, cache, pos = prefill(params, prompts)
-    jax.block_until_ready(logits)
-    t_prefill = time.time() - t0
-    tok = jnp.argmax(logits[:, -1:], axis=-1)
-    out = [np.asarray(tok)[:, 0]]
-    t0 = time.time()
-    for _ in range(args.max_new - 1):
-        if cfg.embedding_input:
-            step_in = {"inputs_embeds": jnp.asarray(
-                rng.randn(args.requests, 1, cfg.d_model), jnp.float32) * 0.1}
-        else:
-            step_in = {"tokens": tok}
-        logits, cache = decode(cfg, params, step_in, cache, pos)
-        pos = pos + 1
-        tok = jnp.argmax(logits[:, -1:], axis=-1)
-        out.append(np.asarray(tok)[:, 0])
-    jax.block_until_ready(logits)
-    t_decode = time.time() - t0
-    gen = np.stack(out, 1)
-    print(f"prefill: {args.requests} x {args.prompt_len} tokens in "
-          f"{t_prefill*1e3:.0f} ms")
-    print(f"decode:  {args.max_new-1} steps x {args.requests} seqs in "
-          f"{t_decode*1e3:.0f} ms "
-          f"({t_decode/(args.max_new-1)*1e3:.1f} ms/step)")
-    print("generations (greedy):")
-    for i, row in enumerate(gen[: min(4, len(gen))]):
-        print(f"  req{i}: {row.tolist()}")
 
 
 def serve_einet(cfg, args):
@@ -92,21 +38,12 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--requests", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--max-batch", type=int, default=0,
-                    help="einet: engine micro-batch cap (0 = min(32, requests))")
+                    help="engine micro-batch cap (0 = min(32, requests))")
     ap.add_argument("--reps", type=int, default=3,
-                    help="einet: steady-state measurement repetitions")
-    ap.add_argument("--smoke", action="store_true")
+                    help="steady-state measurement repetitions")
     args = ap.parse_args()
-    cfg = get_config(args.arch)
-    if isinstance(cfg, EinetConfig):
-        serve_einet(cfg, args)
-    else:
-        if args.smoke:
-            cfg = smoke_variant(cfg)
-        serve_lm(cfg, args)
+    serve_einet(get_config(args.arch), args)
 
 
 if __name__ == "__main__":

