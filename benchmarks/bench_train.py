@@ -58,6 +58,21 @@ SMOKE_CONFIG = EinetConfig(
     batch_size=64,
 )
 
+PD_SMOKE_CONFIG = EinetConfig(
+    name="einet-pd-train-smoke",
+    structure="pd",
+    # 32 vars as a 4x8 image with delta=2 cuts on both axes: a 4-pair PD
+    # circuit whose 3 interior pairs compile to ONE gather-grouped segment
+    # (launches 7 -> 3), so CI exercises the gather kernels end to end
+    height=4,
+    width=8,
+    num_channels=1,
+    delta=2,
+    pd_axes=("h", "w"),
+    num_sums=4,
+    batch_size=64,
+)
+
 # (arch id, benchmark batch, microbatches, timed steps) -- batches are sized
 # for the CPU container; pass --batch/--steps to override, or run on TPU for
 # the paper-scale shapes recorded in the configs.
@@ -277,7 +292,10 @@ def bench_cell(arch: str, cfg: EinetConfig, batch: int, microbatches: int,
 def main(smoke: bool = False, archs=None, batch: int = 0, steps: int = 0,
          reps: int = 2, out: str = "BENCH_train.json") -> dict:
     if smoke:
-        cells = [("smoke", SMOKE_CONFIG, SMOKE_CONFIG.batch_size, 4, 3)]
+        cells = [
+            ("smoke", SMOKE_CONFIG, SMOKE_CONFIG.batch_size, 4, 3),
+            ("smoke-pd", PD_SMOKE_CONFIG, PD_SMOKE_CONFIG.batch_size, 4, 3),
+        ]
         reps = 1
     else:
         cells = [
@@ -303,8 +321,14 @@ def main(smoke: bool = False, archs=None, batch: int = 0, steps: int = 0,
     # regressions).  Smoke timings are too small/noisy to gate on, but the
     # smoke run DOES gate that the grouped path is actually exercised.
     speedup_ok = smoke or all(r["speedup_ok"] for r in results)
+    # grouped-execution gate: EVERY arch must run grouped -- RAT via fused
+    # (canonical) segments, PD via gather segments.  The historical einet_pd
+    # exemption is gone: a PD-family arch reporting per-layer fallback fails
+    # unless it carries an explicit SPEEDUP_WAIVERS entry.
     grouped_ok = all(
-        r["grouping"]["fused_groups"] >= 1 or r["arch_id"] == "einet_pd"
+        r["grouping"]["fused_groups"] >= 1
+        or r["grouping"]["gather_groups"] >= 1
+        or r["arch_id"] in SPEEDUP_WAIVERS
         for r in results
     )
     for r in results:

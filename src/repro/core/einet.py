@@ -20,24 +20,31 @@ inpainting), and MPE-style argmax decoding.
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import plan as plan_lib
 from repro.core import region_graph as rg_lib
 from repro.dist.sharding import constraint as _cst
 from repro.core.exponential_family import ExponentialFamily, Normal
 from repro.core.layers import (
     NEG_INF,
+    gather_grouped_log_einsum_exp,
     grouped_log_einsum_exp,
     log_einsum_exp,
     log_mix_exp,
     normalize_einsum_weights,
     normalize_mixing_weights,
 )
+
+# execution planning lives in core.plan; re-exported here for callers (and
+# tests) that reach the planner types through the model module
+ExecSegment = plan_lib.ExecSegment
+VMEM_BUDGET_BYTES = plan_lib.VMEM_BUDGET_BYTES
+_GROUP_BLOCK_B = plan_lib._GROUP_BLOCK_B
 
 
 # query kinds understood by EiNet.query / the serving engine
@@ -81,30 +88,6 @@ class PairSpec:
         return 0 if self.mix_global is None else len(self.mix_global)
 
 
-@dataclasses.dataclass(frozen=True)
-class ExecSegment:
-    """One entry of the kernel schedule ``EiNet._plan_groups`` emits.
-
-    A fused segment covers pairs [start, stop) executed as ONE grouped
-    kernel launch (``kernels.grouped``) tiled over ``out_block`` final-depth
-    cells x ``block_b`` batch rows; a non-fused segment is a single pair on
-    the per-layer path.
-    """
-
-    start: int
-    stop: int  # exclusive
-    fused: bool
-    out_block: int = 0
-    block_b: int = 0
-
-
-# VMEM working-set budget for one fused-kernel program: a conservative slice
-# of the ~16 MiB/core so weights + recomputed activations + the K^2 product
-# scratch of the BACKWARD pass (the larger of the two) co-reside
-VMEM_BUDGET_BYTES = 12 * 2 ** 20
-_GROUP_BLOCK_B = (128, 64, 32)  # planner's batch-tile candidates, best first
-
-
 @dataclasses.dataclass
 class LeafSpec:
     pair_var: np.ndarray  # (P,) variable ids, concatenated leaf scopes
@@ -146,11 +129,13 @@ class EiNet:
         self.num_vars = graph.num_vars
         self.impl = impl
         self.grouped = bool(grouped)
-        self.vmem_budget = (
-            VMEM_BUDGET_BYTES if vmem_budget is None else int(vmem_budget)
-        )
+        self.vmem_budget = plan_lib.resolve_vmem_budget(vmem_budget)
         self._build()
-        self._plan_groups()
+        self.plan = plan_lib.plan_circuit(
+            self.pair_specs, grouped=self.grouped,
+            vmem_budget=self.vmem_budget,
+        )
+        self.exec_plan = self.plan.segments
 
     # ------------------------------------------------------------------ build
     def _build(self) -> None:
@@ -293,117 +278,18 @@ class EiNet:
             cur.canonical = True
 
     # ------------------------------------------------------------------- plan
-    def _fused_cost_bytes(self, i: int, j: int, s: int, bb: int) -> int:
-        """Estimated VMEM working set of ONE backward-pass program for pairs
-        [i, j) at out_block ``s``, batch tile ``bb`` (padded shapes).  The
-        backward dominates: weights + dW blocks + every depth's recomputed
-        activations + the K^2 product/contraction scratch."""
-        specs = self.pair_specs
-        g = j - i
-        k = specs[i].k_in
-        k_p = -(-k // 16) * 16
-        ko_fp = -(-specs[j - 1].k_out // 128) * 128
-        f = 4  # float32
-        w_bytes = 0
-        for d in range(g):
-            m = 2 ** (g - 1 - d)
-            ko = k_p if d < g - 1 else ko_fp
-            w_bytes += m * s * ko * k_p * k_p * f
-        act = bb * s * k_p * f * sum(2 ** (g - d) for d in range(g + 1))
-        scratch = bb * k_p * k_p * f * 4
-        io = bb * s * ko_fp * f * 2
-        return 2 * w_bytes + act + scratch + io
-
-    def _pick_tiling(self, i: int, j: int) -> Optional[Tuple[int, int]]:
-        """(out_block, block_b) fitting pairs [i, j) in the VMEM budget, or
-        None when the run cannot be fused (structure or budget)."""
-        specs = self.pair_specs
-        if any(not specs[t].canonical for t in range(i, j)):
-            return None
-        # a mixing pair may only TERMINATE a run: its mixture outputs join
-        # the einsum outputs outside the kernel
-        if any(specs[t].mix_global is not None for t in range(i, j - 1)):
-            return None
-        l_out = specs[j - 1].num_partitions
-        for d, t in enumerate(range(i, j)):
-            if specs[t].num_partitions != l_out * 2 ** (j - i - 1 - d):
-                return None  # not an exact canonical halving chain
-            if t < j - 1 and specs[t].k_out != specs[t + 1].k_in:
-                return None
-        for bb in _GROUP_BLOCK_B:
-            for s in range(l_out, 0, -1):
-                if l_out % s:
-                    continue
-                if self._fused_cost_bytes(i, j, s, bb) <= self.vmem_budget:
-                    return s, bb
-        return None
-
-    def _plan_groups(self) -> None:
-        """Compile the pair list into the execution plan: maximal runs of
-        consecutive canonical pairs fused into grouped kernel launches
-        (subject to the VMEM budget), everything else per-layer.
-
-        Grouped planning requires the zero-gather canonical layout
-        end-to-end (``needs_buffer == False``, true for the RAT family);
-        gather-topology structures (PD) fall back to the per-layer path
-        with a single warning.
-        """
-        specs = self.pair_specs
-        n = len(specs)
-        if not self.grouped or self.needs_buffer or n < 2:
-            self.exec_plan = [ExecSegment(i, i + 1, False) for i in range(n)]
-            if self.grouped and self.needs_buffer:
-                bad = sum(1 for p in specs if not p.canonical)
-                warnings.warn(
-                    f"EiNet: {bad}/{n} pair(s) use gather/mixing topology "
-                    "(needs_buffer); depth-grouped execution falls back to "
-                    "the per-layer path for this structure",
-                    stacklevel=3,
-                )
-            return
-        plan: List[ExecSegment] = []
-        i = 0
-        while i < n:
-            best = None
-            j = i + 2
-            while j <= n:
-                tiling = self._pick_tiling(i, j)
-                if tiling is None:
-                    break
-                best = (j, tiling)
-                j += 1
-            if best is not None:
-                j, (s, bb) = best
-                plan.append(ExecSegment(i, j, True, out_block=s, block_b=bb))
-                i = j
-            else:
-                plan.append(ExecSegment(i, i + 1, False))
-                i += 1
-        self.exec_plan = plan
-
+    # (the planner itself lives in core.plan: ``plan_circuit`` compiles the
+    # pair list into ``self.plan`` at construction time)
     @property
     def grouped_active(self) -> bool:
         """True when the forward/backward hot path runs fused segments."""
-        return any(seg.fused for seg in self.exec_plan)
+        return self.plan.grouped_active
 
     def grouping_summary(self) -> Dict[str, Any]:
         """Kernel-launch accounting for one forward pass: the per-layer
         schedule vs the grouped plan (benchmarks record this as the
         ``grouping`` field next to wall-clock)."""
-        n_mix = sum(1 for s in self.pair_specs if s.mix_global is not None)
-        return {
-            "num_pairs": len(self.pair_specs),
-            "launches_per_layer": len(self.pair_specs) + n_mix,
-            "launches_grouped": len(self.exec_plan) + n_mix,
-            "fused_groups": sum(1 for s in self.exec_plan if s.fused),
-            "fused_pairs": sum(
-                s.stop - s.start for s in self.exec_plan if s.fused
-            ),
-            "segments": [
-                [s.start, s.stop, bool(s.fused), s.out_block, s.block_b]
-                for s in self.exec_plan
-            ],
-        }
+        return self.plan.summary()
 
     # ------------------------------------------------------------- parameters
     def init(self, key: jax.Array) -> Dict[str, Any]:
@@ -541,16 +427,23 @@ class EiNet:
         mixing_v: List[jax.Array],
         leaf_out: jax.Array,
     ) -> jax.Array:
-        """The depth-grouped bottom-up pass (``exec_plan`` walk).
+        """The depth-grouped bottom-up pass (``self.plan`` walk).
 
-        Only reachable for all-canonical structures (``needs_buffer`` is
-        False), where every pair reads two static slices of the layer below
-        and mixing can occur only at the final pair -- so no row buffer
-        exists and fused segments are exactly the canonical chains the
-        grouped kernel implements.  Per-layer segments compute the identical
-        per-pair op, making this path bit-exact against the per-layer loop
-        under ``impl="xla"`` by construction.
+        All-canonical structures (``needs_buffer`` is False, the RAT family)
+        walk "fused"/"layer" segments over the previous layer's outputs --
+        no row buffer exists, every pair reads two static slices, and fused
+        segments are exactly the canonical chains the grouped kernel
+        implements.  Structures with gather topology (PD) walk
+        "gather"/"layer" segments over the materialized global row buffer:
+        a gather segment is one table-driven kernel covering a run of
+        depths (mixing in-kernel), a layer segment is the per-pair op on
+        buffer-gathered children.  Either way every segment computes the
+        identical per-pair math in the identical order, making this path
+        bit-exact against the per-layer loop under ``impl="xla"`` by
+        construction.
         """
+        if self.needs_buffer:
+            return self._forward_planned_buffer(einsum_w, mixing_v, leaf_out)
         prev_out = leaf_out
         root_out = None
         for seg in self.exec_plan:
@@ -580,6 +473,63 @@ class EiNet:
             else:
                 prev_out = s if mix_out is None else jnp.concatenate(
                     [s, mix_out], axis=1)
+        if root_out.ndim == 3:
+            root_out = root_out[:, 0, :]
+        return root_out
+
+    def _forward_planned_buffer(
+        self,
+        einsum_w: List[jax.Array],
+        mixing_v: List[jax.Array],
+        leaf_out: jax.Array,
+    ) -> jax.Array:
+        """Row-buffer plan walk for gather-topology structures.
+
+        The buffer is indexed by GLOBAL row id (leaves first, then each
+        pair's einsum rows followed by its mixing rows -- the allocation
+        order of ``_build``), so a gather segment's output rows append in
+        exactly global order and layer segments read ``spec.left`` /
+        ``spec.right`` directly.  The planner never emits "fused"
+        (slice-tiled) segments here: they skip materializing interior rows,
+        which would leave holes in the buffer.
+        """
+        buffer = leaf_out
+        root_out = None
+        for seg in self.exec_plan:
+            if seg.kind == "gather":
+                ws = tuple(
+                    einsum_w[t] for t in range(seg.start, seg.stop)
+                )
+                vs = tuple(
+                    mixing_v[t]
+                    for t in range(seg.start, seg.stop)
+                    if self.pair_specs[t].mix_global is not None
+                )
+                buffer = gather_grouped_log_einsum_exp(
+                    seg.tables, ws, vs, buffer,
+                    block_b=seg.block_b, impl=self.impl,
+                )
+                buffer = _cst(buffer, ("batch", "einet_nodes", None))
+                continue
+            spec = self.pair_specs[seg.start]
+            n_l = buffer[:, spec.left, :]
+            n_r = buffer[:, spec.right, :]
+            s = log_einsum_exp(einsum_w[seg.start], n_l, n_r, impl=self.impl)
+            s = _cst(s, ("batch", "einet_nodes", None))
+            mix_out = None
+            if spec.mix_global is not None:
+                ln = s[:, spec.mix_child_local, :]
+                mix_out = log_mix_exp(
+                    mixing_v[seg.start], ln, jnp.asarray(spec.mix_mask)
+                )
+            if spec.is_final:
+                root_out = (
+                    mix_out if spec.mix_global is not None else s[:, 0, :]
+                )
+            else:
+                new = s if mix_out is None else jnp.concatenate(
+                    [s, mix_out], axis=1)
+                buffer = jnp.concatenate([buffer, new], axis=1)
         if root_out.ndim == 3:
             root_out = root_out[:, 0, :]
         return root_out

@@ -14,6 +14,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 # Large-negative stand-in for log(0): keeps gradients finite where jnp.inf
 # would produce NaNs through max/exp.
@@ -79,6 +80,57 @@ def grouped_log_einsum_exp(ws, x, out_block: int, block_b: int = 128,
         cur = log_einsum_exp(w, cur[:, :half], cur[:, half: 2 * half],
                              impl=impl)
     return cur
+
+
+def gather_grouped_log_einsum_exp(tables, ws, vs, x, block_b: int = 128,
+                                  impl: str = "xla"):
+    """One fused GATHER execution segment: a run of consecutive pairs whose
+    child access is a static row lookup (Poon-Domingos topologies), applied
+    bottom-up to the global row buffer ``x`` (B, r_in, K).
+
+    ``tables`` is a ``core.plan.GatherTables``: per-depth left/right child
+    row ids (into the growing buffer, global numbering) plus per-depth
+    mixing tables (local indices into that depth's einsum outputs).
+
+    With ``impl == "pallas"`` the whole run is ONE kernel launch
+    (``repro.kernels.grouped``): the row buffer lives in VMEM, child
+    lookups are static stacks baked at trace time, and mixing layers run
+    in-kernel.  Other impls execute the run as chained take-along-axis +
+    per-depth ops -- the same ``log_einsum_exp`` / ``log_mix_exp`` on the
+    same gathered rows, with the buffer concatenated incrementally per
+    depth exactly as the per-layer loop does, so grouped XLA execution is
+    bit-exact against the per-layer path FORWARD AND BACKWARD by
+    construction (an identical graph accumulates identically; returning
+    only the new rows and concatenating outside would re-associate the
+    cross-depth cotangent sums by ulps).
+
+    Returns (B, r_in + r_new, K): the EXTENDED row buffer -- the input rows
+    followed by every new row the run emits (einsum rows then mixing rows
+    per depth, in global row order).
+    """
+    if impl == "pallas":
+        from repro.kernels import ops as _kops
+
+        new = _kops.gather_grouped_log_einsum_exp(
+            tables, block_b, tuple(ws), tuple(vs), x
+        )
+        return jnp.concatenate([x, new], axis=1)
+    buf = x
+    vi = 0
+    for t in range(tables.num_depths):
+        left = np.asarray(tables.left[t])
+        right = np.asarray(tables.right[t])
+        s = log_einsum_exp(ws[t], buf[:, left, :], buf[:, right, :],
+                           impl=impl)
+        piece = s
+        if tables.mix_child[t] is not None:
+            child = np.asarray(tables.mix_child[t])
+            mask = jnp.asarray(tables.mix_mask[t], jnp.float32)
+            m = log_mix_exp(vs[vi], s[:, child, :], mask)
+            vi += 1
+            piece = jnp.concatenate([s, m], axis=1)
+        buf = jnp.concatenate([buf, piece], axis=1)
+    return buf
 
 
 # Floor for the stabilized sum when dividing the backward cotangent: must be

@@ -5,6 +5,9 @@
   * ``grouped_log_einsum_exp`` -- the whole-subcircuit form: a run of
     consecutive canonical pairs fused into ONE launch, intermediate
     log-activations resident in VMEM (``grouped.py``).
+  * ``gather_grouped_log_einsum_exp`` -- the gather-topology form: a run
+    of Poon-Domingos pairs whose child access goes through static
+    ``core.plan.GatherTables``, mixing layers fused in-kernel.
 
 Kernels run compiled on TPU and in interpret mode on CPU; ``ref.py`` holds
 the pure-jnp oracles that define their semantics.
@@ -12,13 +15,17 @@ the pure-jnp oracles that define their semantics.
 
 from repro.kernels import dispatch, grouped, ops, ref
 from repro.kernels.ops import (
+    gather_grouped_log_einsum_exp,
     grouped_log_einsum_exp,
     log_einsum_exp,
     pad_for_lanes,
+    pad_gather_for_lanes,
     pad_group_for_lanes,
+    pad_to_lanes,
 )
 
 __all__ = [
-    "dispatch", "grouped", "ops", "ref", "grouped_log_einsum_exp",
-    "log_einsum_exp", "pad_for_lanes", "pad_group_for_lanes",
+    "dispatch", "grouped", "ops", "ref", "gather_grouped_log_einsum_exp",
+    "grouped_log_einsum_exp", "log_einsum_exp", "pad_for_lanes",
+    "pad_gather_for_lanes", "pad_group_for_lanes", "pad_to_lanes",
 ]

@@ -25,8 +25,8 @@ a plain ``BlockSpec`` over the second axis tiles the whole subtree:
   * Each weight / input cell is read by EXACTLY ONE program (the trees are
     disjoint): fusion adds zero redundant HBM traffic, and shrinking ``s``
     shrinks the per-program working set proportionally, so the VMEM planner
-    (``EiNet._plan_groups``) can fuse arbitrarily wide depths by tiling the
-    output cells instead of giving up.
+    (``core.plan.plan_circuit``) can fuse arbitrarily wide depths by tiling
+    the output cells instead of giving up.
   * Per cell the contraction is the SAME ``(B_t, K^2) @ (K^2, K_out)`` MXU
     dot as the per-layer kernel (identical operands, identical op), so the
     fused forward is bit-identical to the per-layer Pallas path wherever the
@@ -47,8 +47,35 @@ tiles accumulate by revisiting the same block; batch is the innermost,
 sequential grid axis) and the input cotangent, with the stabilized sum
 recomputed by the forward's exact contraction.
 
+GATHER-GROUPED kernels (``gather_grouped_log_einsum_exp_pallas`` + bwd)
+extend the same fusion to ARBITRARY child topology -- Poon-Domingos pairs
+whose children are cross-depth gathers, plus interior mixing layers -- via
+static permutation tables (``core.plan.GatherTables``) compiled once on
+host.  The tables are baked into the kernel as COMPILE-TIME CONSTANTS:
+every gather unrolls into static row selects over an in-VMEM row list, so
+irregular child access costs zero dynamic indexing inside the kernel (the
+PyJuice block-sparse thesis).  We deliberately do NOT use
+``PrefetchScalarGridSpec`` scalar-prefetch here: prefetch feeds BlockSpec
+index maps, i.e. block-LEVEL indirection across the grid, while these
+gathers select rows WITHIN the single resident buffer block -- a static
+unroll is both simpler and exact.  The trade-off is one specialized program
+per distinct table set (fine: one circuit has a handful of segments) and,
+on real TPUs, constant-materialization of the tables (they are a few
+hundred ints; revisit with scalar prefetch only if Mosaic constant pools
+become a problem -- TPU validation is ROADMAP-gated).  Grid is batch-only:
+the row buffer is irregular, so the segment is not cell-tiled; the planner
+(``core.plan.gather_cost_bytes``) bounds run LENGTH instead of out_block.
+Interior depths keep K_out == K and outputs stay on the 16-multiple K lane
+(never widened to 128: all depths are non-final by construction).
+
 Validated against autodiff of the chained XLA reference in interpret mode --
-see ``tests/test_grouped.py``.
+see ``tests/test_grouped.py`` and ``tests/test_gather_grouped.py``.  Forward
+parity is bitwise; backward parity vs the per-layer path is bitwise on XLA
+and float32-ulp-level through these kernels (per-layer ops pad every K_out
+to 128 lanes while grouped interiors stay on the 16-pad, and gemm
+reductions over different padded lengths associate partial sums
+differently -- same values, different rounding; the per-depth math is
+identical).
 """
 
 from __future__ import annotations
@@ -365,3 +392,400 @@ def grouped_log_einsum_exp_bwd_pallas(
     )
     gx = outs[g].reshape(bp, l_out * 2 ** g, k)
     return gws, gx[:b] if bp != b else gx
+
+
+# ---------------------------------------------------------------------------
+# gather-grouped kernels: static-table topology (PD), mixing in-kernel
+# ---------------------------------------------------------------------------
+def _gather_depth_fwd(w, lnl, lnr):
+    """One gather depth inside the kernel: flat per-cell operands.
+
+    w:         (L, K_out, K, K) weight block.
+    lnl / lnr: (B_t, L, K) gathered log-activations.
+    Returns (B_t, L, K_out) -- the per-layer kernel's exact stabilization
+    and (B_t, K^2) @ (K^2, K_out) MXU contraction, per cell.
+    """
+    bb, l, k = lnl.shape
+    ko = w.shape[1]
+    a = jnp.maximum(jnp.max(lnl, axis=-1, keepdims=True), NEG_INF)
+    ap = jnp.maximum(jnp.max(lnr, axis=-1, keepdims=True), NEG_INF)
+    el = jnp.exp(lnl - a)
+    er = jnp.exp(lnr - ap)
+    outs = []
+    for li in range(l):
+        prod = (el[:, li, :, None] * er[:, li, None, :]).reshape(bb, k * k)
+        wmat = w[li].reshape(ko, k * k)
+        s = jnp.dot(prod, wmat.T, preferred_element_type=jnp.float32)
+        outs.append(a[:, li] + ap[:, li] + jnp.log(s))
+    return jnp.stack(outs, axis=1)
+
+
+def _gather_depth_bwd(w, lnl, lnr, gout):
+    """Backward of one gather depth (the per-layer backward's exact math).
+
+    gout: (B_t, L, K_out) cotangent of this depth's einsum outputs.
+    Returns (gw (L, K_out, K, K), gl (B_t, L, K), gr (B_t, L, K)).
+    """
+    bb, l, k = lnl.shape
+    ko = w.shape[1]
+    a = jnp.maximum(jnp.max(lnl, axis=-1, keepdims=True), NEG_INF)
+    ap = jnp.maximum(jnp.max(lnr, axis=-1, keepdims=True), NEG_INF)
+    el = jnp.exp(lnl - a)
+    er = jnp.exp(lnr - ap)
+    gw_rows, gl_rows, gr_rows = [], [], []
+    for li in range(l):
+        eli, eri = el[:, li], er[:, li]  # (B_t, K)
+        prod = (eli[:, :, None] * eri[:, None, :]).reshape(bb, k * k)
+        wmat = w[li].reshape(ko, k * k)
+        # forward's stabilized sum, recomputed bit-exactly
+        s = jnp.dot(prod, wmat.T, preferred_element_type=jnp.float32)
+        ginv = gout[:, li] / jnp.maximum(s, _S_FLOOR)  # (B_t, K_out)
+        gw_rows.append(
+            jax.lax.dot_general(
+                ginv, prod, (((0,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            ).reshape(ko, k, k)
+        )
+        c = jnp.dot(ginv, wmat, preferred_element_type=jnp.float32)
+        c = c.reshape(bb, k, k)
+        gl_rows.append(eli * jnp.sum(c * eri[:, None, :], axis=2))
+        gr_rows.append(eri * jnp.sum(c * eli[:, :, None], axis=1))
+    return (
+        jnp.stack(gw_rows, axis=0),
+        jnp.stack(gl_rows, axis=1),
+        jnp.stack(gr_rows, axis=1),
+    )
+
+
+def _gather_mix_frame(v, s, child, mask):
+    """``core.layers._log_mix_exp_frame`` replicated in-kernel on statically
+    gathered children: (masked ln, clamped max, exp'd inputs, stabilized
+    sum).  The mask is applied by STATIC selection (padded children become
+    NEG_INF rows at trace time -- Pallas kernels cannot capture array
+    constants), which selects exactly the values ``jnp.where(mask > 0, ...)``
+    selects; every traced op then matches the XLA frame expression for
+    expression, so mixing rows are bitwise-identical.
+
+    v: (M, C, K); s: (B_t, L, K) this depth's einsum rows; child / mask:
+    STATIC (M, C) nested int tuples (local einsum indices, 0/1 flags).
+    """
+    bb, _, k = s.shape
+    neg = jnp.full((bb, k), NEG_INF, dtype=s.dtype)
+    lnm = jnp.stack(
+        [
+            jnp.stack(
+                [
+                    s[:, c, :] if mask[mi][ci] else neg
+                    for ci, c in enumerate(row)
+                ],
+                axis=1,
+            )
+            for mi, row in enumerate(child)
+        ],
+        axis=1,
+    )  # (B_t, M, C, K)
+    a = jnp.maximum(jnp.max(lnm, axis=2, keepdims=True), NEG_INF)
+    e = jnp.exp(lnm - a)
+    ssum = jnp.sum(v[None] * e, axis=2)  # (B_t, M, K)
+    return a, e, ssum
+
+
+def _gather_fwd_sweep(tables, w_blocks, v_blocks, x):
+    """The shared forward walk over an in-VMEM row list: returns
+    (rows, new_rows, frames) where frames[t] = (lnl, lnr, s, e_base, m_base)
+    for the backward's residual recompute."""
+    r_in = tables.num_in_rows
+    rows = [x[:, r, :] for r in range(r_in)]
+    new_rows = []
+    frames = []
+    vi = 0
+    for t in range(tables.num_depths):
+        lnl = jnp.stack([rows[r] for r in tables.left[t]], axis=1)
+        lnr = jnp.stack([rows[r] for r in tables.right[t]], axis=1)
+        s = _gather_depth_fwd(w_blocks[t], lnl, lnr)  # (B_t, L, K)
+        e_base = len(rows)
+        for li in range(s.shape[1]):
+            rows.append(s[:, li, :])
+            new_rows.append(s[:, li, :])
+        m_base = None
+        if tables.mix_child[t] is not None:
+            a, _, ssum = _gather_mix_frame(
+                v_blocks[vi], s, tables.mix_child[t], tables.mix_mask[t]
+            )
+            vi += 1
+            m = a[:, :, 0, :] + jnp.log(ssum)  # (B_t, M, K)
+            m_base = len(rows)
+            for mi in range(m.shape[1]):
+                rows.append(m[:, mi, :])
+                new_rows.append(m[:, mi, :])
+        frames.append((lnl, lnr, s, e_base, m_base))
+    return rows, new_rows, frames
+
+
+def _make_gather_fwd_kernel(tables):
+    d_total = tables.num_depths
+    n_mix = tables.num_mix_depths
+
+    def kernel(*refs):
+        w_refs = refs[:d_total]
+        v_refs = refs[d_total: d_total + n_mix]
+        x_ref, o_ref = refs[-2], refs[-1]
+        _, new_rows, _ = _gather_fwd_sweep(
+            tables,
+            [w[...] for w in w_refs],
+            [v[...] for v in v_refs],
+            x_ref[...],
+        )
+        o_ref[...] = jnp.stack(new_rows, axis=1).astype(o_ref.dtype)
+
+    return kernel
+
+
+def _make_gather_bwd_kernel(tables):
+    d_total = tables.num_depths
+    n_mix = tables.num_mix_depths
+    r_in = tables.num_in_rows
+
+    def kernel(*refs):
+        w_refs = refs[:d_total]
+        v_refs = refs[d_total: d_total + n_mix]
+        x_ref = refs[d_total + n_mix]
+        g_ref = refs[d_total + n_mix + 1]
+        gw_refs = refs[d_total + n_mix + 2: 2 * d_total + n_mix + 2]
+        gv_refs = refs[2 * d_total + n_mix + 2: 2 * d_total + 2 * n_mix + 2]
+        gx_ref = refs[-1]
+        bi = pl.program_id(0)
+
+        w_blocks = [w[...] for w in w_refs]
+        v_blocks = [v[...] for v in v_refs]
+        g = g_ref[...]  # (B_t, r_new, K)
+        # residual-recompute: re-derive every row + every depth's frame
+        rows, _, frames = _gather_fwd_sweep(
+            tables, w_blocks, v_blocks, x_ref[...]
+        )
+        zero = jnp.zeros_like(rows[0])
+        cot = [zero] * r_in + [
+            g[:, idx, :] for idx in range(len(rows) - r_in)
+        ]
+        vi = n_mix
+        for t in reversed(range(d_total)):
+            lnl, lnr, s, e_base, m_base = frames[t]
+            # mixing backward FIRST: its gradient lands on this depth's
+            # einsum rows before their own backward runs
+            if tables.mix_child[t] is not None:
+                vi -= 1
+                v = v_blocks[vi]
+                child = tables.mix_child[t]
+                mask = tables.mix_mask[t]
+                gm = jnp.stack(
+                    [cot[m_base + mi] for mi in range(len(child))], axis=1
+                )  # (B_t, M, K)
+                _, e, ssum = _gather_mix_frame(v, s, child, mask)
+                ginv = gm / jnp.maximum(ssum, _S_FLOOR)
+                # static masking (see _gather_mix_frame): masked children
+                # contribute exact zeros to dV and nothing to the scatter
+                gv_rows = []
+                for mi, row in enumerate(child):
+                    gv_cols = []
+                    for ci, c in enumerate(row):
+                        if mask[mi][ci]:
+                            ge = ginv[:, mi, :] * e[:, mi, ci, :]
+                            gv_cols.append(jnp.sum(ge, axis=0))
+                            cot[e_base + c] = (
+                                cot[e_base + c] + ge * v[mi, ci][None]
+                            )
+                        else:
+                            gv_cols.append(jnp.zeros_like(v[mi, ci]))
+                    gv_rows.append(jnp.stack(gv_cols, axis=0))
+                gv_t = jnp.stack(gv_rows, axis=0)  # (M, C, K)
+                gv_ref = gv_refs[vi]
+
+                @pl.when(bi == 0)
+                def _init_v(gv_ref=gv_ref, gv_t=gv_t):
+                    gv_ref[...] = gv_t.astype(gv_ref.dtype)
+
+                @pl.when(bi > 0)
+                def _acc_v(gv_ref=gv_ref, gv_t=gv_t):
+                    gv_ref[...] += gv_t.astype(gv_ref.dtype)
+
+            gs = jnp.stack(
+                [cot[e_base + li] for li in range(len(tables.left[t]))],
+                axis=1,
+            )
+            gw_t, gl, gr = _gather_depth_bwd(w_blocks[t], lnl, lnr, gs)
+            # scatter order (right vs left) is numerically irrelevant: a
+            # row hit by both sides accumulates two terms on top of its
+            # existing cotangent, and measured diffs vs the per-layer path
+            # are identical under either order -- the residual float32-ulp
+            # gap comes from gemm reduction association under different
+            # padded lane lengths (see gather_grouped docstring), not from
+            # scatter ordering
+            for li, r in enumerate(tables.right[t]):
+                cot[r] = cot[r] + gr[:, li, :]
+            for li, r in enumerate(tables.left[t]):
+                cot[r] = cot[r] + gl[:, li, :]
+            gw_ref = gw_refs[t]
+
+            @pl.when(bi == 0)
+            def _init_w(gw_ref=gw_ref, gw_t=gw_t):
+                gw_ref[...] = gw_t.astype(gw_ref.dtype)
+
+            @pl.when(bi > 0)
+            def _acc_w(gw_ref=gw_ref, gw_t=gw_t):
+                gw_ref[...] += gw_t.astype(gw_ref.dtype)
+
+        gx_ref[...] = jnp.stack(cot[:r_in], axis=1).astype(gx_ref.dtype)
+
+    return kernel
+
+
+def _gather_geometry(tables, ws, vs, x):
+    """Validate the table-carrying shapes; returns (r_new, K)."""
+    b, r_in, k = x.shape
+    if r_in != tables.num_in_rows:
+        raise ValueError(
+            f"gather input has {r_in} rows; tables expect "
+            f"{tables.num_in_rows}"
+        )
+    if len(ws) != tables.num_depths:
+        raise ValueError(
+            f"{len(ws)} weight depths vs {tables.num_depths} table depths"
+        )
+    for t, w in enumerate(ws):
+        l = len(tables.left[t])
+        if w.shape != (l, k, k, k):
+            raise ValueError(
+                f"gather depth {t} weights {w.shape} != {(l, k, k, k)} "
+                "(interior depths keep K_out == K)"
+            )
+    if len(vs) != tables.num_mix_depths:
+        raise ValueError(
+            f"{len(vs)} mixing depths vs {tables.num_mix_depths} in tables"
+        )
+    vi = 0
+    for t in range((tables.num_depths)):
+        if tables.mix_child[t] is None:
+            continue
+        m, c = len(tables.mix_child[t]), len(tables.mix_child[t][0])
+        if vs[vi].shape != (m, c, k):
+            raise ValueError(
+                f"gather mix depth {t} weights {vs[vi].shape} != {(m, c, k)}"
+            )
+        vi += 1
+    return tables.num_new_rows, k
+
+
+@functools.partial(
+    jax.jit, static_argnames=("tables", "block_b", "interpret")
+)
+def gather_grouped_log_einsum_exp_pallas(
+    tables,
+    ws: Tuple[jax.Array, ...],
+    vs: Tuple[jax.Array, ...],
+    x: jax.Array,
+    block_b: int = 128,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Fused gather-topology forward: one launch for a table-driven run.
+
+    Args:
+      tables: ``core.plan.GatherTables`` (static; baked into the kernel).
+      ws: per-depth linear-domain weights, (L_t, K, K, K) each (every depth
+        is interior: K_out == K, padded per ``ops.pad_gather_for_lanes``).
+      vs: mixing weights for the table's mixing depths, in depth order,
+        (M_t, C_t, K) each.
+      x: (B, r_in, K) log-domain row buffer below the segment.
+      block_b: batch tile (grid is batch-only; the segment is not
+        cell-tiled -- see the module docstring).
+      interpret: None defers to backend dispatch.
+
+    Returns: (B, r_new, K) float32 -- every new row (einsum rows then mixing
+    rows, per depth, in emission order = global row order).
+    """
+    interpret = resolve_interpret(interpret)
+    r_new, k = _gather_geometry(tables, ws, vs, x)
+    b = x.shape[0]
+    block_b = min(block_b, b)
+    (x,) = _pad_batch(block_b, x)
+    bp = x.shape[0]
+    grid = (bp // block_b,)
+    r_in = tables.num_in_rows
+    in_specs = (
+        [pl.BlockSpec(w.shape, lambda bi: (0, 0, 0, 0)) for w in ws]
+        + [pl.BlockSpec(v.shape, lambda bi: (0, 0, 0)) for v in vs]
+        + [pl.BlockSpec((block_b, r_in, k), lambda bi: (bi, 0, 0))]
+    )
+    out = pl.pallas_call(
+        _make_gather_fwd_kernel(tables),
+        out_shape=jax.ShapeDtypeStruct((bp, r_new, k), jnp.float32),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((block_b, r_new, k), lambda bi: (bi, 0, 0)),
+        interpret=interpret,
+    )(*ws, *vs, x)
+    return out[:b] if bp != b else out
+
+
+@functools.partial(
+    jax.jit, static_argnames=("tables", "block_b", "interpret")
+)
+def gather_grouped_log_einsum_exp_bwd_pallas(
+    tables,
+    ws: Tuple[jax.Array, ...],
+    vs: Tuple[jax.Array, ...],
+    x: jax.Array,
+    g_out: jax.Array,
+    block_b: int = 128,
+    interpret: Optional[bool] = None,
+):
+    """Fused gather-topology backward: dW per depth, dV per mixing depth and
+    the input-buffer cotangent, one launch (residual-recompute: the forward
+    rows and every stabilized frame are re-derived in VMEM from the primals;
+    dW/dV accumulate across batch tiles via ``pl.when`` on the sequential
+    batch grid axis).
+
+    Returns: (gws tuple matching ``ws``, gvs tuple matching ``vs``,
+    gx (B, r_in, K)).
+    """
+    interpret = resolve_interpret(interpret)
+    r_new, k = _gather_geometry(tables, ws, vs, x)
+    b = x.shape[0]
+    block_b = min(block_b, b)
+    x, g_out = _pad_batch(block_b, x, g_out)
+    bp = x.shape[0]
+    grid = (bp // block_b,)
+    r_in = tables.num_in_rows
+    d_total = tables.num_depths
+    in_specs = (
+        [pl.BlockSpec(w.shape, lambda bi: (0, 0, 0, 0)) for w in ws]
+        + [pl.BlockSpec(v.shape, lambda bi: (0, 0, 0)) for v in vs]
+        + [
+            pl.BlockSpec((block_b, r_in, k), lambda bi: (bi, 0, 0)),
+            pl.BlockSpec((block_b, r_new, k), lambda bi: (bi, 0, 0)),
+        ]
+    )
+    # dW / dV blocks ignore the batch grid index: every batch tile revisits
+    # the same block and accumulates (batch is the only -- hence innermost,
+    # sequential -- grid axis)
+    out_shape = (
+        tuple(jax.ShapeDtypeStruct(w.shape, jnp.float32) for w in ws)
+        + tuple(jax.ShapeDtypeStruct(v.shape, jnp.float32) for v in vs)
+        + (jax.ShapeDtypeStruct((bp, r_in, k), jnp.float32),)
+    )
+    out_specs = (
+        tuple(pl.BlockSpec(w.shape, lambda bi: (0, 0, 0, 0)) for w in ws)
+        + tuple(pl.BlockSpec(v.shape, lambda bi: (0, 0, 0)) for v in vs)
+        + (pl.BlockSpec((block_b, r_in, k), lambda bi: (bi, 0, 0)),)
+    )
+    outs = pl.pallas_call(
+        _make_gather_bwd_kernel(tables),
+        out_shape=out_shape,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        interpret=interpret,
+    )(*ws, *vs, x, g_out)
+    gws = tuple(outs[:d_total])
+    gvs = tuple(outs[d_total: d_total + len(vs)])
+    gx = outs[-1]
+    return gws, gvs, gx[:b] if bp != b else gx

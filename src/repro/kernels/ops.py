@@ -17,9 +17,21 @@ gradients of padded lanes are identically zero.
 
 ``grouped_log_einsum_exp`` is the whole-subcircuit form (``grouped.py``):
 one custom-VJP op covering a RUN of consecutive canonical depths, with the
-same residual-recompute contract extended group-wide
-(``pad_group_for_lanes``); it is what ``EiNet`` dispatches fused execution
-segments to when ``impl == "pallas"``.
+same residual-recompute contract extended group-wide; it is what ``EiNet``
+dispatches canonical fused execution segments to when ``impl == "pallas"``.
+``gather_grouped_log_einsum_exp`` is its gather-topology sibling: the op
+additionally carries static ``core.plan.GatherTables`` (non-diff, baked
+into the kernel) plus per-depth mixing weights, and returns every new row
+of the run's global row buffer.
+
+All three ops share ONE padding contract, ``pad_to_lanes``: K rounds up to
+a multiple of 16, the terminal output lane to 128 when the run ends at a
+root (``final=True``) and to the padded K when the run is all-interior
+(gather runs -- their outputs feed later gathers at width K).  Log-domain
+arrays pad with -inf, weights and cotangents with 0, so padding changes no
+contraction and gradients of padded lanes are identically zero.  The
+legacy entry points (``pad_for_lanes``, ``pad_group_for_lanes``) and the
+gather form (``pad_gather_for_lanes``) are thin views of this contract.
 """
 
 from __future__ import annotations
@@ -32,6 +44,8 @@ import jax.numpy as jnp
 
 from repro.kernels import ref as _ref
 from repro.kernels.grouped import (
+    gather_grouped_log_einsum_exp_bwd_pallas,
+    gather_grouped_log_einsum_exp_pallas,
     grouped_log_einsum_exp_bwd_pallas,
     grouped_log_einsum_exp_pallas,
 )
@@ -42,34 +56,83 @@ from repro.kernels.log_einsum_exp import (
 
 
 # --------------------------------------------------------------------------
+# the one lane-padding contract (shared by all kernel entry points)
+# --------------------------------------------------------------------------
+def pad_to_lanes(ws, logs=(), zeros=(), final=True):
+    """Pad every kernel operand class to MXU lane multiples, one contract.
+
+    K (the shared sum-node width, last dim of every weight) rounds up to a
+    multiple of 16, so the flattened K^2 product axis is a multiple of
+    256 >= one 128 lane.  The run's terminal output width -- K_out of the
+    LAST depth -- rounds up to a full 128 lane when ``final=True`` (the run
+    ends at a root whose outputs leave the kernel stack) and to the padded
+    K when ``final=False`` (all-interior gather runs: outputs re-enter
+    later depths at width K).  Interior depths always pad K_out to the
+    padded K: their padded weight rows are zero, so padded output lanes
+    evaluate ``a + a' + log(0) = -inf`` inside the kernel -- precisely the
+    -inf padding the next depth's input lanes need, making run padding
+    self-consistent with no per-depth fixups.
+
+    Args:
+      ws: per-depth weights, each (..., K_out_d, K, K); padded with zeros.
+      logs: log-domain arrays (..., K); padded with -inf on the last dim
+        (= log 0, exp'd to exactly 0 inside the kernel).
+      zeros: linear-domain arrays padded with zeros on the last dim to the
+        terminal output width -- saved outputs / backward cotangents
+        (..., K_out) and gather mixing weights (M, C, K).  Zeros are inert:
+        padded cotangent columns are zero, so the padded frame value never
+        matters, and gradients of padded lanes are identically zero.
+
+    Returns ``(ws_p, logs_p, zeros_p)`` as tuples; arrays already on lane
+    boundaries are returned unchanged.
+    """
+    k = ws[0].shape[-1]
+    k_p = -(-k // 16) * 16
+    k_out = ws[-1].shape[1]
+    out_p = -(-k_out // 128) * 128 if final else k_p
+    ws_p = []
+    for d, w in enumerate(ws):
+        kd = w.shape[1]
+        kd_p = out_p if d == len(ws) - 1 else k_p
+        ws_p.append(
+            jnp.pad(
+                w,
+                ((0, 0),) * (w.ndim - 3)
+                + ((0, kd_p - kd), (0, k_p - k), (0, k_p - k)),
+            )
+            if (kd_p, k_p) != (kd, k) else w
+        )
+    logs_p = tuple(
+        jnp.pad(
+            a,
+            ((0, 0),) * (a.ndim - 1) + ((0, k_p - a.shape[-1]),),
+            constant_values=-jnp.inf,
+        )
+        if a.shape[-1] != k_p else a
+        for a in logs
+    )
+    zeros_p = tuple(
+        jnp.pad(a, ((0, 0),) * (a.ndim - 1) + ((0, out_p - a.shape[-1]),))
+        if a.shape[-1] != out_p else a
+        for a in zeros
+    )
+    return tuple(ws_p), logs_p, zeros_p
+
+
+# --------------------------------------------------------------------------
 # log-einsum-exp: fused forward + fused backward (custom VJP)
 # --------------------------------------------------------------------------
 def pad_for_lanes(w, ln_left, ln_right, *kout_arrays):
-    """Pad the contraction dims to MXU lane multiples of 128.
+    """Per-layer view of ``pad_to_lanes``: one depth, root-width output.
 
-    The one padding contract shared by the forward and backward kernels:
-    K is rounded up to a multiple of 16 (so the flattened K^2 product axis is
-    a multiple of 256 >= one 128 lane), K_out to a full 128 lane.  Padded
-    ``ln`` entries are -inf (= log 0, exp'd to exactly 0 inside the kernel)
-    and padded weights are 0, so the padded contraction is bit-exact; callers
-    slice the padding off the outputs (``unpad_lanes``).  Extra
-    ``kout_arrays`` -- (B, L, K_out)-shaped tensors such as the saved forward
-    output or the backward cotangent -- are zero-padded on the K_out lane
-    (zeros are inert there: padded cotangent columns are zero, so the padded
-    frame value never matters).
+    Extra ``kout_arrays`` -- (B, L, K_out)-shaped tensors such as the saved
+    forward output or the backward cotangent -- are zero-padded on the
+    K_out lane.
     """
-    _, k_out, k, _ = w.shape
-    k_p = -(-k // 16) * 16
-    ko_p = -(-k_out // 128) * 128
-    if (k_p, ko_p) == (k, k_out):
-        return (w, ln_left, ln_right) + kout_arrays
-    w = jnp.pad(w, ((0, 0), (0, ko_p - k_out), (0, k_p - k), (0, k_p - k)))
-    lane = ((0, 0), (0, 0), (0, k_p - k))
-    ln_left = jnp.pad(ln_left, lane, constant_values=-jnp.inf)
-    ln_right = jnp.pad(ln_right, lane, constant_values=-jnp.inf)
-    kout_lane = ((0, 0), (0, 0), (0, ko_p - k_out))
-    padded = tuple(jnp.pad(x, kout_lane) for x in kout_arrays)
-    return (w, ln_left, ln_right) + padded
+    (w_p,), logs_p, zeros_p = pad_to_lanes(
+        (w,), logs=(ln_left, ln_right), zeros=kout_arrays
+    )
+    return (w_p,) + logs_p + zeros_p
 
 
 @jax.custom_vjp
@@ -105,40 +168,28 @@ log_einsum_exp.defvjp(_lee_fwd, _lee_bwd)
 # grouped log-einsum-exp: one op per fused execution segment (custom VJP)
 # --------------------------------------------------------------------------
 def pad_group_for_lanes(ws, x, g_out=None):
-    """``pad_for_lanes`` extended to a canonical run of depths.
-
-    K pads to a multiple of 16 with -inf input lanes / zero weights, exactly
-    as in the per-layer contract.  INTERIOR depths pad K_out to the padded K
-    (their outputs are the next depth's inputs): padded weight rows are
-    zero, so padded output lanes evaluate ``a + a' + log(0) = -inf`` inside
-    the kernel -- precisely the -inf padding the next depth's input lanes
-    need, making group padding self-consistent with no per-depth fixups.
-    Only the final depth pads K_out to a full 128 lane; ``g_out`` (the
-    backward cotangent) zero-pads on that lane.
-    """
-    k = ws[0].shape[-1]
-    k_p = -(-k // 16) * 16
-    ws_p = []
-    for d, w in enumerate(ws):
-        ko = w.shape[1]
-        ko_p = k_p if d < len(ws) - 1 else -(-ko // 128) * 128
-        ws_p.append(
-            jnp.pad(w, ((0, 0), (0, ko_p - ko), (0, k_p - k), (0, k_p - k)))
-            if (ko_p, k_p) != (ko, k) else w
-        )
-    x_p = (
-        jnp.pad(x, ((0, 0), (0, 0), (0, k_p - k)), constant_values=-jnp.inf)
-        if k_p != k else x
-    )
+    """Canonical-run view of ``pad_to_lanes``: interior depths keep the
+    padded K, only the final depth widens to a 128 lane; ``g_out`` (the
+    backward cotangent) zero-pads on that lane."""
+    zeros = () if g_out is None else (g_out,)
+    ws_p, (x_p,), zeros_p = pad_to_lanes(ws, logs=(x,), zeros=zeros)
     if g_out is None:
-        return tuple(ws_p), x_p
-    ko = ws[-1].shape[1]
-    ko_p = -(-ko // 128) * 128
-    g_p = (
-        jnp.pad(g_out, ((0, 0), (0, 0), (0, ko_p - ko)))
-        if ko_p != ko else g_out
+        return ws_p, x_p
+    return ws_p, x_p, zeros_p[0]
+
+
+def pad_gather_for_lanes(ws, vs, x, g_out=None):
+    """Gather-run view of ``pad_to_lanes``: every depth is interior
+    (``final=False``), so weights, mixing weights, the row buffer and the
+    cotangent all stay on the padded-K lane."""
+    zeros = tuple(vs) + (() if g_out is None else (g_out,))
+    ws_p, (x_p,), zeros_p = pad_to_lanes(
+        ws, logs=(x,), zeros=zeros, final=False
     )
-    return tuple(ws_p), x_p, g_p
+    vs_p = zeros_p[: len(vs)]
+    if g_out is None:
+        return ws_p, vs_p, x_p
+    return ws_p, vs_p, x_p, zeros_p[-1]
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
@@ -151,7 +202,7 @@ def grouped_log_einsum_exp(
     """Whole-subcircuit log-einsum-exp over a canonical depth run.
 
     Args:
-      out_block / block_b: static tiling (chosen by ``EiNet._plan_groups``).
+      out_block / block_b: static tiling (chosen by ``core.plan``).
       ws: per-depth unpadded weights, input side first; depth ``d`` is
         (L_out * 2^(G-1-d), K_out_d, K, K), interior K_out_d == K.
       x: (B, L_out * 2^G, K) log-domain first-depth inputs.
@@ -187,6 +238,62 @@ def _glee_bwd(out_block, block_b, res, g):
 
 
 grouped_log_einsum_exp.defvjp(_glee_fwd, _glee_bwd)
+
+
+# --------------------------------------------------------------------------
+# gather-grouped log-einsum-exp: one op per gather segment (custom VJP)
+# --------------------------------------------------------------------------
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def gather_grouped_log_einsum_exp(
+    tables,
+    block_b: int,
+    ws: Tuple[jax.Array, ...],
+    vs: Tuple[jax.Array, ...],
+    x: jax.Array,
+) -> jax.Array:
+    """Whole-subcircuit log-einsum-exp over a gather-topology depth run.
+
+    Args:
+      tables: static ``core.plan.GatherTables`` (per-depth child-row and
+        mixing tables, baked into the kernel as compile-time constants).
+      block_b: static batch tile (chosen by ``core.plan.plan_circuit``).
+      ws: per-depth unpadded einsum weights, (L_t, K, K, K) each (every
+        depth in a gather run is interior: K_out == K).
+      vs: mixing weights for the run's mixing depths in depth order,
+        (M_t, C_t, K) each.
+      x: (B, r_in, K) log-domain global row buffer below the run.
+
+    Returns: (B, r_new, K) -- every new buffer row the run emits (einsum
+    rows then mixing rows per depth, in global row order).
+    """
+    k = x.shape[-1]
+    wp, vp, xp = pad_gather_for_lanes(ws, vs, x)
+    out = gather_grouped_log_einsum_exp_pallas(
+        tables, wp, vp, xp, block_b=block_b
+    )
+    return out[..., :k]
+
+
+def _gg_fwd(tables, block_b, ws, vs, x):
+    out = gather_grouped_log_einsum_exp(tables, block_b, ws, vs, x)
+    # same residual contract as the canonical ops: save the unpadded
+    # primals, re-pad in the backward, recompute every depth's frame in VMEM
+    return out, (tuple(ws), tuple(vs), x)
+
+
+def _gg_bwd(tables, block_b, res, g):
+    ws, vs, x = res
+    k = x.shape[-1]
+    wp, vp, xp, gp = pad_gather_for_lanes(ws, vs, x, g)
+    gws, gvs, gx = gather_grouped_log_einsum_exp_bwd_pallas(
+        tables, wp, vp, xp, gp, block_b=block_b
+    )
+    gws = tuple(gw[:, :k, :k, :k] for gw in gws)
+    gvs = tuple(gv[..., :k] for gv in gvs)
+    return gws, gvs, gx[..., :k]
+
+
+gather_grouped_log_einsum_exp.defvjp(_gg_fwd, _gg_bwd)
 
 
 # re-export the oracle for convenience

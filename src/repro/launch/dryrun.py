@@ -26,6 +26,7 @@ import jax
 import numpy as np
 
 from repro.configs import REGISTRY, get_config
+from repro.core import plan as plan_lib
 from repro.launch.hlo_analysis import analyze_hlo
 from repro.launch.mesh import make_production_mesh
 
@@ -48,6 +49,9 @@ def run_cell(arch: str, mesh_kind: str, out_dir: str,
     try:
         with jax.set_mesh(mesh):
             lowered, t_lower, model = lower_einet_cell(cfg, mesh, multi_pod)
+            print(f"[plan] {arch}: "
+                  f"{plan_lib.format_summary(model.grouping_summary())}",
+                  flush=True)
             t0 = time.time()
             compiled = lowered.compile()
             t_compile = time.time() - t0

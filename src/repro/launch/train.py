@@ -22,6 +22,7 @@ import numpy as np
 
 from repro.checkpoint import CheckpointManager
 from repro.configs import EinetConfig, get_config
+from repro.core import plan as plan_lib
 from repro.data import datasets as ds_lib
 from repro.data import synthetic
 from repro.data.pipeline import ShardedLoader
@@ -151,6 +152,8 @@ def main():
             from repro import mixture as mx
 
             base = dr.build_einet(cfg)
+            print(f"[plan] {args.arch}: "
+                  f"{plan_lib.format_summary(base.grouping_summary())}")
             model = mx.EiNetMixture(base, args.mixture)
             data = einet_train_data(cfg, args.dataset, args.data_dir)
             mcfg = mx.MixtureTrainConfig(
@@ -178,6 +181,8 @@ def main():
                           "last_ll": 0.0}
         else:
             model = dr.build_einet(cfg)
+            print(f"[plan] {args.arch}: "
+                  f"{plan_lib.format_summary(model.grouping_summary())}")
             params = model.init(jax.random.PRNGKey(0))
             data = einet_train_data(cfg, args.dataset, args.data_dir)
             loader = einet_loader(

@@ -84,3 +84,19 @@ def test_registered_arch_builds_and_forwards():
     # the registered RAT archs run depth-grouped by default (this PR)
     assert model.grouped_active
     assert model.grouping_summary()["fused_groups"] >= 1
+
+
+@pytest.mark.parametrize("arch", ["einet_pd_mnist", "einet_pd",
+                                  "einet_celeba"])
+def test_registered_pd_archs_build_gather_plans(arch):
+    """Every registered PD arch compiles to a gather-grouped plan with
+    strictly fewer launches than the per-layer loop (the gather-fusion
+    tentpole); only the root pair stays per-layer."""
+    model = build_einet(get_config(arch))
+    assert model.grouped_active, arch
+    s = model.grouping_summary()
+    assert s["gather_groups"] >= 1, (arch, s)
+    assert s["launches_grouped"] < s["launches_per_layer"], (arch, s)
+    kinds = [seg[2] for seg in s["segments"]]
+    assert all(k in ("gather", "layer") for k in kinds), (arch, kinds)
+    assert kinds[-1] == "layer"  # the root pair (K_out != K)

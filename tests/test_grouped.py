@@ -8,8 +8,10 @@ The tentpole contract this file pins:
     loop -- per segment, per depth, the same per-cell op in the same order;
   * gradients through the grouped custom VJP match the per-layer VJP to
     <= 1e-8 (measured 0.0 on the XLA path);
-  * gather/mixing (needs_buffer) structures fall back to the per-layer
-    path with ONE build-time warning and identical results;
+  * gather/mixing (needs_buffer) structures compile to GATHER-grouped
+    segments (core.plan.GatherTables) instead of falling back -- only the
+    final (root) pair stays per-layer (tests/test_gather_grouped.py pins
+    the numerics; this file pins the planner integration);
   * the VMEM budget splits fused segments without changing a single bit;
   * the Pallas entry points take ``interpret=None`` and resolve it through
     ``kernels.dispatch`` (never ``interpret=True`` in a public signature).
@@ -23,6 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.core import plan as plan_lib
 from repro.core.einet import _GROUP_BLOCK_B, EiNet
 from repro.core.layers import NEG_INF
 from repro.core.exponential_family import Normal
@@ -121,18 +124,22 @@ def test_grouped_neg_inf_saturated_rows():
     assert _max_tree_diff(gr_g, gr_p) <= 1e-8
 
 
-def test_needs_buffer_fallback_warns_once_and_matches():
+def test_needs_buffer_structures_gather_group_and_match():
     """Scope collisions at small var counts produce shared leaves ->
-    non-canonical pairs -> needs_buffer: grouped planning must fall back to
-    the per-layer path with one warning and identical results."""
+    non-canonical pairs -> needs_buffer: the planner now compiles these to
+    gather-grouped segments (no warning, no fallback) with bitwise-identical
+    results vs the per-layer loop."""
     graph = random_binary_trees(16, 3, 3, seed=0)
     ef = Normal()
     with warnings.catch_warnings(record=True) as rec:
         warnings.simplefilter("always")
         m_g = EiNet(graph, num_sums=4, exponential_family=ef, grouped=True)
-    fallback_warnings = [w for w in rec if "needs_buffer" in str(w.message)]
-    assert len(fallback_warnings) == 1
-    assert not m_g.grouped_active
+    assert not any("needs_buffer" in str(w.message) for w in rec)
+    assert m_g.needs_buffer
+    assert m_g.grouped_active
+    s = m_g.grouping_summary()
+    assert s["gather_groups"] >= 1, s
+    assert s["launches_grouped"] < s["launches_per_layer"], s
     m_p = EiNet(graph, num_sums=4, exponential_family=ef, grouped=False)
     params = m_g.init(jax.random.PRNGKey(0))
     x = jnp.asarray(np.random.RandomState(2).randn(4, 16).astype(np.float32))
@@ -150,7 +157,9 @@ def test_vmem_budget_forces_segment_split_bitwise():
     assert whole.grouping_summary()["fused_groups"] == 1  # whole circuit
     # largest budget that cannot fit 3 depths at the smallest tiling:
     # 2-depth groups still fit, so the greedy planner must split
-    budget = whole._fused_cost_bytes(0, 3, 1, min(_GROUP_BLOCK_B)) - 1
+    budget = plan_lib.fused_cost_bytes(
+        whole.pair_specs, 0, 3, 1, min(_GROUP_BLOCK_B)
+    ) - 1
     split = EiNet(graph, num_sums=4, exponential_family=ef, grouped=True,
                   vmem_budget=budget)
     summary = split.grouping_summary()
@@ -209,17 +218,20 @@ def test_registered_archs_grouped_parity():
     ))) == 0.0
 
 
-def test_registered_pd_arch_falls_back_identically():
-    """PD (gather topology) archs keep per-layer execution -- grouped=True
-    must change nothing but emit the single fallback warning."""
+def test_registered_pd_arch_builds_gather_plan():
+    """PD (gather topology) archs now compile to gather-grouped segments:
+    strictly fewer launches than the per-layer loop, with only the final
+    (root) pair left per-layer."""
     cfg = get_config("einet_pd_mnist")
-    with warnings.catch_warnings(record=True) as rec:
-        warnings.simplefilter("always")
-        m = build_einet(cfg)
-    assert any("needs_buffer" in str(w.message) for w in rec)
-    assert not m.grouped_active
+    m = build_einet(cfg)
+    assert m.grouped_active
     s = m.grouping_summary()
-    assert s["launches_grouped"] == s["launches_per_layer"]
+    assert s["gather_groups"] >= 1, s
+    assert s["launches_grouped"] < s["launches_per_layer"], s
+    # the only per-layer remainder is the root pair (non-uniform K_out)
+    kinds = [seg[2] for seg in s["segments"]]
+    assert kinds[-1] == "layer" and all(k == "gather" for k in kinds[:-1]), s
+    assert any("final (root) pair" in r for _, r in s["fallbacks"]), s
 
 
 def test_sampling_cache_path_stays_per_layer():
@@ -253,6 +265,7 @@ def test_grouping_summary_launch_accounting():
     s = m_g.grouping_summary()
     assert s["launches_grouped"] < s["launches_per_layer"]
     covered = []
-    for start, stop, fused, _, _ in s["segments"]:
+    for start, stop, kind, _, _ in s["segments"]:
+        assert kind in ("fused", "gather", "layer")
         covered.extend(range(start, stop))
     assert covered == list(range(s["num_pairs"]))

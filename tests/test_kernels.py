@@ -53,7 +53,9 @@ def test_log_einsum_exp_wrapper_pads_odd_k(b, l, k, ko):
     wrapper padding (regression: the kernel docstring promised padding that
     ``ops.py`` never implemented -- odd K would fail to compile on real TPU)."""
     w, lnl, lnr = _random_lee(jax.random.PRNGKey(10 * k + ko), b, l, k, ko)
-    wp, lp, rp = ops.pad_for_lanes(w, lnl, lnr)
+    # the unified entry point: every padding view (per-layer, canonical
+    # group, gather group) is a thin wrapper over pad_to_lanes
+    (wp,), (lp, rp), () = ops.pad_to_lanes((w,), logs=(lnl, lnr))
     assert (wp.shape[2] ** 2) % 128 == 0, "K^2 must land on a 128 lane multiple"
     assert wp.shape[1] % 128 == 0, "K_out must land on a 128 lane multiple"
     assert lp.shape == rp.shape == (b, l, wp.shape[2])
@@ -61,6 +63,39 @@ def test_log_einsum_exp_wrapper_pads_odd_k(b, l, k, ko):
     assert out.shape == (b, l, ko)
     ref = log_einsum_exp_ref(w, lnl, lnr)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-4)
+
+
+@pytest.mark.parametrize("k", [3, 5, 10, 13, 17])
+def test_pad_to_lanes_unified_contract(k):
+    """One padding contract behind every view: per-layer (final 128-lane
+    output), canonical group, and gather group (all-interior 16-pad,
+    including the (M, C, K) mixing tables) agree with pad_to_lanes."""
+    b, l, ko, m, c = 4, 3, 7, 2, 3
+    key = jax.random.PRNGKey(k)
+    w, lnl, lnr = _random_lee(key, b, l, k, ko)
+    wi = jax.nn.softmax(
+        jax.random.normal(key, (l, k, k, k)).reshape(l, k, -1), -1
+    ).reshape(l, k, k, k)
+    v = jax.nn.softmax(jax.random.normal(key, (m, c, k)), 1)
+    x = -jnp.abs(jax.random.normal(key, (b, 2 * l, k)))
+    k_p = -(-k // 16) * 16
+    # per-layer view: final output pads to 128 lanes
+    wp, lp, rp = ops.pad_for_lanes(w, lnl, lnr)
+    (wp2,), (lp2, rp2), () = ops.pad_to_lanes((w,), logs=(lnl, lnr))
+    assert wp.shape == wp2.shape and wp.shape[1] % 128 == 0
+    np.testing.assert_array_equal(np.asarray(lp), np.asarray(lp2))
+    assert np.asarray(lp)[..., k:].min() == -np.inf or k == k_p
+    # gather view: everything interior (k_p), mixing tables zero-padded
+    (wip,), vsp, xp = ops.pad_gather_for_lanes((wi,), (v,), x)
+    assert wip.shape == (l, k_p, k_p, k_p)
+    assert vsp[0].shape == (m, c, k_p)
+    assert np.asarray(vsp[0])[..., k:].max(initial=0.0) == 0.0
+    assert xp.shape == (b, 2 * l, k_p)
+    # canonical group view agrees on the shared interior contract
+    wgp, xgp = ops.pad_group_for_lanes((wi,), x)
+    np.testing.assert_array_equal(np.asarray(xgp), np.asarray(xp))
+    np.testing.assert_array_equal(np.asarray(wgp[0])[:, :k_p],
+                                  np.asarray(wip))
 
 
 def test_log_einsum_exp_custom_vjp():

@@ -1,0 +1,200 @@
+"""Unit suite for the circuit execution planner (``repro.core.plan``).
+
+Exercises the planner as a pure host-side function over ``PairSpec`` lists:
+segment boundaries under tight VMEM budgets, mixed canonical/gather region
+graphs (buffer mode forbids slice-tiled fusion), fallback-reason reporting,
+launch accounting, gather-table construction, and the budget-resolution
+priority (ctor > env > default).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import plan as plan_lib
+from repro.core.einet import EiNet, PairSpec
+from repro.core.exponential_family import Normal
+from repro.core.region_graph import poon_domingos, random_binary_trees
+
+
+def _canonical_spec(rows_below, num_partitions, k, is_final=False,
+                    k_out=None):
+    left = np.arange(num_partitions)
+    return PairSpec(
+        left=rows_below - 2 * num_partitions + left,
+        right=rows_below - num_partitions + left,
+        einsum_global=rows_below + left,
+        k_in=k,
+        k_out=k if k_out is None else k_out,
+        mix_child_local=None,
+        mix_mask=None,
+        mix_global=None,
+        is_final=is_final,
+        canonical=True,
+    )
+
+
+def _canonical_chain(depths, k, leaves=None):
+    """An exact halving chain: 2**depths leaf rows down to one root pair."""
+    specs = []
+    rows = leaves if leaves is not None else 2 ** depths
+    for d in range(depths):
+        n = 2 ** (depths - 1 - d)
+        specs.append(
+            _canonical_spec(rows, n, k, is_final=(d == depths - 1))
+        )
+        rows += n
+    return specs
+
+
+def test_resolve_vmem_budget_priority(monkeypatch):
+    monkeypatch.delenv(plan_lib.VMEM_BUDGET_ENV, raising=False)
+    assert plan_lib.resolve_vmem_budget() == plan_lib.VMEM_BUDGET_BYTES
+    monkeypatch.setenv(plan_lib.VMEM_BUDGET_ENV, "123456")
+    assert plan_lib.resolve_vmem_budget() == 123456
+    assert plan_lib.resolve_vmem_budget(777) == 777  # ctor wins over env
+
+
+def test_vmem_env_reaches_model_plan(monkeypatch):
+    monkeypatch.setenv(plan_lib.VMEM_BUDGET_ENV, str(4 * 2 ** 20))
+    graph = random_binary_trees(64, 3, 2, seed=0)
+    m = EiNet(graph, num_sums=4, exponential_family=Normal(), grouped=True)
+    assert m.vmem_budget == 4 * 2 ** 20
+    assert m.grouping_summary()["vmem_budget"] == 4 * 2 ** 20
+
+
+def test_disabled_plan_is_all_layer_segments():
+    specs = _canonical_chain(3, 4)
+    p = plan_lib.plan_circuit(specs, grouped=False)
+    assert [s.kind for s in p.segments] == ["layer"] * 3
+    assert not p.grouped_active
+    assert all(r == "grouped execution disabled"
+               for _, r in p.fallback_reasons)
+    per_layer, planned = p.launches()
+    assert per_layer == planned == 3
+
+
+def test_canonical_chain_single_fused_segment():
+    specs = _canonical_chain(4, 4)
+    p = plan_lib.plan_circuit(specs)
+    assert [s.kind for s in p.segments] == ["fused"]
+    assert (p.segments[0].start, p.segments[0].stop) == (0, 4)
+    assert p.launches() == (4, 1)
+
+
+def test_canonical_tight_budget_splits_segments():
+    """The greedy planner splits exactly where the budget stops admitting a
+    longer run, and the segments tile the pair list."""
+    specs = _canonical_chain(4, 4)
+    full_cost = plan_lib.fused_cost_bytes(
+        specs, 0, 3, 1, min(plan_lib._GROUP_BLOCK_B)
+    )
+    p = plan_lib.plan_circuit(specs, vmem_budget=full_cost - 1)
+    kinds = [s.kind for s in p.segments]
+    assert kinds.count("fused") >= 2, kinds
+    covered = [i for s in p.segments for i in range(s.start, s.stop)]
+    assert covered == list(range(4))
+
+
+def test_canonical_budget_below_two_depths_goes_per_layer():
+    specs = _canonical_chain(3, 4)
+    p = plan_lib.plan_circuit(specs, vmem_budget=1)
+    assert [s.kind for s in p.segments] == ["layer"] * 3
+    # every pair with a 2-run candidate reports the budget as the blocker
+    # (the last pair has no candidate run at all)
+    reasons = dict(p.fallback_reasons)
+    assert "vmem budget" in reasons[0] and "vmem budget" in reasons[1]
+
+
+def test_buffer_mode_forbids_fused_segments():
+    """A single non-canonical pair anywhere forces row-buffer mode: even
+    perfectly canonical runs execute as gather segments (slice-tiled fusion
+    would skip materializing rows the buffer needs)."""
+    graph = random_binary_trees(16, 3, 3, seed=0)
+    m = EiNet(graph, num_sums=4, exponential_family=Normal(), grouped=True)
+    assert m.needs_buffer
+    assert any(sp.canonical for sp in m.pair_specs)  # genuinely mixed graph
+    s = m.grouping_summary()
+    assert s["fused_groups"] == 0
+    assert s["gather_groups"] >= 1
+
+
+def test_gather_tight_budget_splits_runs():
+    """PD chain under a budget that fits 2-pair gather runs but not the
+    whole run: >= 2 gather groups, still covering every non-final pair."""
+    graph = poon_domingos(4, 4, 1)
+    m = EiNet(graph, num_sums=3, exponential_family=Normal(), grouped=True)
+    specs = m.pair_specs
+    whole = plan_lib.plan_circuit(specs)
+    assert whole.summary()["gather_groups"] == 1
+    stop = whole.segments[0].stop
+    assert stop >= 4  # need a >= 4-pair run for a two-group split
+    # largest budget that cannot fit the first (stop - 1) pairs: the greedy
+    # first run shrinks and the tail still fits a second gather run
+    budget = plan_lib.gather_cost_bytes(
+        specs, 0, stop - 1, min(plan_lib._GROUP_BLOCK_B)
+    ) - 1
+    split = plan_lib.plan_circuit(specs, vmem_budget=budget)
+    s = split.summary()
+    assert s["gather_groups"] >= 2, s
+    covered = [i for seg in split.segments for i in range(seg.start, seg.stop)]
+    assert covered == list(range(len(specs)))
+
+
+def test_gather_final_pair_stays_per_layer_with_reason():
+    graph = poon_domingos(2, 8, 2)
+    m = EiNet(graph, num_sums=6, exponential_family=Normal(), grouped=True)
+    p = m.plan
+    assert p.segments[-1].kind == "layer"
+    assert any("final (root) pair" in r for _, r in p.fallback_reasons)
+
+
+def test_gather_tables_match_specs():
+    graph = poon_domingos(2, 8, 2)
+    m = EiNet(graph, num_sums=6, exponential_family=Normal(), grouped=True)
+    seg = next(s for s in m.plan.segments if s.kind == "gather")
+    t = seg.tables
+    hash(t)  # static kernel/custom_vjp arg: must be hashable
+    assert t.num_in_rows == int(m.pair_specs[seg.start].einsum_global[0])
+    assert t.num_depths == seg.stop - seg.start
+    assert t.num_new_rows == sum(
+        sp.num_partitions + sp.num_mixed
+        for sp in m.pair_specs[seg.start: seg.stop]
+    )
+    for d, sp in enumerate(m.pair_specs[seg.start: seg.stop]):
+        assert t.left[d] == tuple(int(v) for v in sp.left)
+        assert t.right[d] == tuple(int(v) for v in sp.right)
+        if sp.mix_global is None:
+            assert t.mix_child[d] is None
+        else:
+            assert np.array_equal(np.asarray(t.mix_child[d]),
+                                  sp.mix_child_local)
+            assert np.array_equal(np.asarray(t.mix_mask[d]), sp.mix_mask)
+
+
+def test_launch_accounting_per_kind():
+    """A gather segment is ONE launch (in-kernel mixing); fused and layer
+    segments pay for the terminating/own pair's mixing launch."""
+    graph = poon_domingos(4, 8, 2)
+    m = EiNet(graph, num_sums=4, exponential_family=Normal(), grouped=True)
+    p = m.plan
+    per_layer, planned = p.launches()
+    assert per_layer == p.num_pairs + sum(p.mix_flags)
+    expect = 0
+    for seg in p.segments:
+        if seg.kind == "gather":
+            expect += 1
+        elif seg.kind == "fused":
+            expect += 1 + int(p.mix_flags[seg.stop - 1])
+        else:
+            expect += 1 + int(p.mix_flags[seg.start])
+    assert planned == expect
+    assert planned < per_layer
+
+
+def test_format_summary_mentions_every_segment_and_fallback():
+    graph = poon_domingos(2, 8, 2)
+    m = EiNet(graph, num_sums=6, exponential_family=Normal(), grouped=True)
+    line = plan_lib.format_summary(m.grouping_summary())
+    assert "gather[" in line
+    assert "final (root) pair" in line
+    assert f"vmem budget {m.vmem_budget} B" in line
