@@ -192,6 +192,35 @@ def eval_summary(root: str = "artifacts/eval") -> str:
     return "\n\n".join(parts)
 
 
+def verify_summary() -> str:
+    """Verifier-coverage row per registered arch.  Needs jax (the circuit
+    is built to be verified); degrades to a placeholder without it."""
+    try:
+        from repro.analysis.verify import verify_config
+        from repro.configs import REGISTRY as configs
+    except Exception:  # noqa: BLE001 -- dependency-light contract
+        return ("_verifier unavailable on this host (requires jax) — run "
+                "`PYTHONPATH=src python -m repro.launch.dryrun --verify`._")
+    rows = ["| arch | pairs | plan | invariants checked | findings | status |",
+            "|" + "---|" * 6]
+    for name in sorted(configs):
+        try:
+            from repro.launch.cells import build_einet
+
+            model = build_einet(configs[name])
+            report = verify_config(configs[name])
+            s = model.plan.summary()
+            plan = (f"{s['fused_groups']} fused + {s['gather_groups']} "
+                    f"gather / {s['num_pairs']} pairs")
+            rows.append(
+                f"| {report.name} | {len(model.pair_specs)} | {plan} | "
+                f"{len(report.invariants)} | {len(report.findings)} | "
+                f"{'ok' if report.ok else 'FAILED'} |")
+        except Exception as e:  # noqa: BLE001 -- a failed build is a row
+            rows.append(f"| {name} | — | — | — | — | ERROR: {e!r} |")
+    return "\n".join(rows)
+
+
 def main():
     base = roofline_summary("artifacts/dryrun_baseline", "16x16")
     opt_dir = "artifacts/dryrun_opt" if os.path.isdir("artifacts/dryrun_opt") \
@@ -202,6 +231,7 @@ def main():
     perf = open("benchmarks/perf_log.md").read()
     header = open("benchmarks/experiments_header.md").read()
     out = header
+    out = out.replace("{{VERIFY}}", verify_summary())
     out = out.replace("{{DRYRUN_SINGLE}}", single)
     out = out.replace("{{DRYRUN_MULTI}}", multi)
     out = out.replace("{{ROOFLINE_BASELINE}}", base)

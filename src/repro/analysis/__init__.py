@@ -1,0 +1,50 @@
+"""Static analysis for the EiNet stack: verifier, sentry, repo lint.
+
+Everything tractable about an EiNet rests on structural invariants --
+smoothness and decomposability of the region graph (paper §2) -- and
+everything fast about this repo rests on compile-time artifacts: the
+``CircuitPlan`` segment schedule, frozen ``GatherTables`` permutation rows,
+the ``pad_to_lanes`` padding contract, the shared NEG_INF convention.  None
+of those are checked by running the model: a corrupted gather table still
+produces finite numbers, a weak-typed parameter still trains (it just
+silently recompiles every step), an ``interpret=True`` default still passes
+CPU tests.  This package is the static layer that catches that defect class
+before a TPU run does:
+
+  * :mod:`repro.analysis.verify`  -- prove smoothness/decomposability of a
+    region graph and the circuit built over it, and validate every
+    ``CircuitPlan`` (gather-table permutation consistency, VMEM accounting,
+    lane/padding contract) into a typed :class:`~repro.analysis.verify.VerifyReport`.
+    Wired into ``EiNet(verify=...)`` / ``REPRO_VERIFY`` and
+    ``python -m repro.launch.dryrun --verify`` (a CI gate).
+  * :mod:`repro.analysis.sentry`  -- a recompile sentry: wrap jitted entry
+    points, count compile-cache misses by abstract signature, and flag
+    weak-type / dtype-promotion leaks, so "one compile per (kind, bucket)"
+    is an assertable invariant for serve, train and the mixture step.
+  * :mod:`repro.analysis.lint`    -- AST-based repo-specific rules
+    (``python -m repro.analysis.lint``, a CI gate): NEG_INF-scale literals,
+    ``interpret=`` defaults, unpadded Pallas call sites, bare ``jax.jit``
+    outside the compile registry, donated buffers read after donation.
+"""
+
+from repro.analysis.verify import (  # noqa: F401
+    Finding,
+    VerifyError,
+    VerifyReport,
+    verify_config,
+    verify_einet,
+    verify_plan,
+    verify_region_graph,
+)
+from repro.analysis.sentry import CompileSentry  # noqa: F401
+
+__all__ = [
+    "Finding",
+    "VerifyError",
+    "VerifyReport",
+    "verify_config",
+    "verify_einet",
+    "verify_plan",
+    "verify_region_graph",
+    "CompileSentry",
+]

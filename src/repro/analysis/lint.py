@@ -1,0 +1,357 @@
+"""AST-based repo lint: the conventions this codebase's bug history bought.
+
+Five rules, each pinned to a past defect or a contract the rest of the
+stack relies on:
+
+  * ``neg-inf-literal``     -- no NEG_INF-scale numeric literals (|v| >=
+    1e20) outside ``core/layers.py``: PR 2 shipped a hard-coded ``-1e30``
+    that silently disagreed with the shared log-domain floor.  Import
+    ``NEG_INF`` instead.
+  * ``interpret-default``   -- kernel entry points take ``interpret=None``
+    and defer to ``kernels.dispatch.resolve_interpret`` (PR 3 shipped
+    ``interpret=True`` public defaults that pinned CPU interpret mode on
+    TPU).  Outside ``repro/kernels/`` the knob must not appear at all.
+  * ``pallas-contract``     -- ``pl.pallas_call`` and the raw ``*_pallas``
+    kernels are reachable only through the ``repro.kernels.ops`` wrappers,
+    which own the ``pad_to_lanes`` / ``pad_group_for_lanes`` padding
+    contract; a direct call from outside ``repro/kernels/`` bypasses the
+    lane contract the launch shapes assume.
+  * ``bare-jit``            -- no ``jax.jit`` / ``jax.pmap`` outside
+    ``repro/compile.py`` (the registry), ``repro/train/`` (step builders
+    route through the registry) and ``repro/kernels/`` (jitted kernel ABI
+    wrappers with static tiling args).  Stray jit objects each carry their
+    own compile cache: duplicated compiles, no shared accounting, and the
+    recompile sentry cannot see them.
+  * ``donated-read``        -- a step built by ``make_em_step`` /
+    ``make_sharded_em_step`` / ``make_mixture_em_step`` donates its first
+    argument; reading that buffer after the call (without rebinding it from
+    the result) is undefined behaviour jax only warns about at runtime.
+
+CLI (a CI fast-job gate)::
+
+    python -m repro.analysis.lint            # scan src/repro, exit 0/1
+    python -m repro.analysis.lint PATH ...   # explicit roots/files
+
+Waivers live in ``analysis/lint_waivers.json`` -- a machine-readable list
+of ``{"rule", "path", "line", "reason"}`` entries (line optional).  The
+file starts (and per ISSUE 8 ships) EMPTY: the tree lints clean.  A waiver
+is for the rare deliberate exception, and every entry carries its reason.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import pathlib
+import sys
+from typing import Iterable, Iterator, List, Optional, Sequence, Tuple
+
+# |literal| at or above this is "NEG_INF scale" (threshold spelled as an
+# expression so the lint does not flag its own definition)
+_NEG_INF_SCALE = 10.0 ** 20
+
+RULES = {
+    "neg-inf-literal": (
+        "NEG_INF-scale literal; import NEG_INF from repro.core.layers"
+    ),
+    "interpret-default": (
+        "interpret= must default to None (kernels.dispatch decides) and "
+        "must not appear outside repro/kernels/"
+    ),
+    "pallas-contract": (
+        "pl.pallas_call / *_pallas kernels are private to repro/kernels/; "
+        "call the repro.kernels.ops wrappers (they own pad_to_lanes)"
+    ),
+    "bare-jit": (
+        "bare jax.jit/jax.pmap; route through repro.compile.REGISTRY "
+        "(ProgramRegistry.jit/aot)"
+    ),
+    "donated-read": (
+        "donated buffer read after the donating step call; rebind it from "
+        "the step's result"
+    ),
+}
+
+# rule -> path prefixes (repo-module style, see _relpath) where it is OFF
+_ALLOW = {
+    "neg-inf-literal": ("repro/core/layers.py",),
+    "bare-jit": ("repro/compile.py", "repro/train/", "repro/kernels/"),
+    "pallas-contract": ("repro/kernels/",),
+}
+
+_STEP_MAKERS = {"make_em_step", "make_sharded_em_step", "make_mixture_em_step"}
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    rule: str
+    path: str  # repo-module style (see _relpath)
+    line: int
+    message: str
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}: {self.rule}: {self.message}"
+
+
+def _relpath(path: str) -> str:
+    """Normalize to the module-ish form rules match on: the posix path
+    from the last ``src/`` component (``repro/kernels/ops.py``)."""
+    parts = pathlib.PurePath(path).as_posix().split("/")
+    if "src" in parts:
+        parts = parts[len(parts) - parts[::-1].index("src"):]
+    return "/".join(p for p in parts if p not in (".", ""))
+
+
+def _allowed(rule: str, rel: str) -> bool:
+    return any(rel.startswith(p) or rel == p.rstrip("/")
+               for p in _ALLOW.get(rule, ()))
+
+
+def _terminal_name(node: ast.AST) -> Optional[str]:
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    return None
+
+
+# ------------------------------------------------------------------- rules
+def _check_neg_inf(tree: ast.AST, rel: str) -> Iterator[Violation]:
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Constant) and isinstance(
+            node.value, (int, float)
+        ) and not isinstance(node.value, bool):
+            if abs(node.value) >= _NEG_INF_SCALE:
+                yield Violation(
+                    "neg-inf-literal", rel, node.lineno,
+                    f"literal {node.value!r} is NEG_INF-scale; import "
+                    f"NEG_INF from repro.core.layers")
+
+
+def _check_interpret(tree: ast.AST, rel: str) -> Iterator[Violation]:
+    in_kernels = rel.startswith("repro/kernels/")
+    for node in ast.walk(tree):
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        a = node.args
+        params = list(a.posonlyargs) + list(a.args)
+        # defaults align to the TAIL of (posonly + args)
+        defaults: List[Optional[ast.expr]] = (
+            [None] * (len(params) - len(a.defaults)) + list(a.defaults)
+        )
+        params += list(a.kwonlyargs)
+        defaults += list(a.kw_defaults)
+        for arg, default in zip(params, defaults):
+            if arg.arg != "interpret":
+                continue
+            if not in_kernels:
+                yield Violation(
+                    "interpret-default", rel, node.lineno,
+                    f"function {node.name!r} exposes an interpret= knob "
+                    f"outside repro/kernels/ (dispatch decides)")
+            elif default is not None and not (
+                isinstance(default, ast.Constant) and default.value is None
+            ):
+                # a no-default interpret (resolve_interpret itself) is fine:
+                # it forces the caller to decide explicitly
+                yield Violation(
+                    "interpret-default", rel, node.lineno,
+                    f"function {node.name!r}: interpret must default to "
+                    f"None (kernels.dispatch.resolve_interpret decides)")
+
+
+def _check_pallas(tree: ast.AST, rel: str) -> Iterator[Violation]:
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Attribute) and node.attr == "pallas_call":
+            yield Violation(
+                "pallas-contract", rel, node.lineno,
+                "direct pl.pallas_call outside repro/kernels/ bypasses "
+                "the pad_to_lanes launch contract")
+        elif isinstance(node, ast.Call):
+            name = _terminal_name(node.func)
+            if name and name.endswith("_pallas"):
+                yield Violation(
+                    "pallas-contract", rel, node.lineno,
+                    f"direct call to raw kernel {name!r}; use the "
+                    f"repro.kernels.ops wrapper (it owns the padding)")
+
+
+def _check_bare_jit(tree: ast.AST, rel: str) -> Iterator[Violation]:
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Attribute) and isinstance(
+            node.value, ast.Name
+        ) and node.value.id == "jax" and node.attr in ("jit", "pmap"):
+            yield Violation(
+                "bare-jit", rel, node.lineno,
+                f"bare jax.{node.attr}; route through "
+                f"repro.compile.REGISTRY so programs share one cache and "
+                f"the recompile sentry can account for them")
+
+
+class _DonatedReads(ast.NodeVisitor):
+    """Linear over-approximate scan: names returned by the step makers
+    donate their first positional arg at every call; a Load of a donated
+    name before a rebinding Store is a violation.  Reads, donations and
+    stores inside ONE statement apply in that order, so the canonical
+    ``params, ll = step(params, x)`` is clean."""
+
+    def __init__(self, rel: str):
+        self.rel = rel
+        self.violations: List[Violation] = []
+
+    def visit_FunctionDef(self, node):  # noqa: N802
+        self._scan(node.body, set(), set())
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    def _scan(self, body, step_vars: set, donated: set) -> None:
+        for stmt in body:
+            nested = []
+            for attr in ("body", "orelse", "finalbody"):
+                nested.extend(getattr(stmt, attr, []) or [])
+            head = stmt
+            if nested:  # compound: analyze the header expr, then recurse
+                for field in ("test", "iter"):
+                    expr = getattr(stmt, field, None)
+                    if expr is not None:
+                        self._stmt(expr, step_vars, donated)
+                self._scan(nested, step_vars, donated)
+                continue
+            self._stmt(head, step_vars, donated)
+
+    def _stmt(self, stmt, step_vars: set, donated: set) -> None:
+        reads, stores, new_steps, donations = set(), set(), set(), []
+        for node in ast.walk(stmt):
+            if isinstance(node, ast.Name):
+                (reads if isinstance(node.ctx, ast.Load) else stores).add(
+                    node.id)
+            if isinstance(node, ast.Call):
+                fname = _terminal_name(node.func)
+                if fname in _STEP_MAKERS:
+                    parent_targets = getattr(stmt, "targets", None)
+                    if parent_targets and isinstance(
+                        parent_targets[0], ast.Name
+                    ):
+                        new_steps.add(parent_targets[0].id)
+                if isinstance(node.func, ast.Name) and (
+                    node.func.id in step_vars
+                ) and node.args and isinstance(node.args[0], ast.Name):
+                    donations.append((node.args[0].id, node.lineno))
+        for name in sorted(reads & donated):
+            self.violations.append(Violation(
+                "donated-read", self.rel, stmt.lineno,
+                f"{name!r} was donated to a compiled EM step and is read "
+                f"before being rebound from the step's result"))
+        for name, _ in donations:
+            donated.add(name)
+        donated -= stores
+        step_vars |= new_steps
+
+
+def _check_donated(tree: ast.AST, rel: str) -> Iterator[Violation]:
+    checker = _DonatedReads(rel)
+    checker.visit(tree)
+    yield from checker.violations
+
+
+_CHECKS = (
+    _check_neg_inf,
+    _check_interpret,
+    _check_pallas,
+    _check_bare_jit,
+    _check_donated,
+)
+
+
+# ------------------------------------------------------------------ driver
+def lint_source(src: str, path: str = "<snippet>") -> List[Violation]:
+    """Lint one source string (the negative-test entry point)."""
+    rel = _relpath(path)
+    tree = ast.parse(src)
+    out: List[Violation] = []
+    for check in _CHECKS:
+        out.extend(v for v in check(tree, rel) if not _allowed(v.rule, rel))
+    return sorted(out, key=lambda v: (v.path, v.line, v.rule))
+
+
+def _iter_py_files(paths: Sequence[str]) -> Iterator[pathlib.Path]:
+    for p in paths:
+        path = pathlib.Path(p)
+        if path.is_dir():
+            yield from sorted(path.rglob("*.py"))
+        else:
+            yield path
+
+
+def load_waivers(path: Optional[str] = None) -> List[dict]:
+    wpath = pathlib.Path(path) if path else (
+        pathlib.Path(__file__).parent / "lint_waivers.json"
+    )
+    if not wpath.exists():
+        return []
+    waivers = json.loads(wpath.read_text())
+    for w in waivers:
+        missing = {"rule", "path", "reason"} - set(w)
+        if missing:
+            raise ValueError(
+                f"waiver {w!r} is missing required field(s) {sorted(missing)}"
+            )
+    return waivers
+
+
+def _waived(v: Violation, waivers: Iterable[dict]) -> bool:
+    return any(
+        w["rule"] == v.rule
+        and (v.path == w["path"] or v.path.endswith("/" + w["path"]))
+        and ("line" not in w or int(w["line"]) == v.line)
+        for w in waivers
+    )
+
+
+def run_lint(
+    paths: Sequence[str], waivers_path: Optional[str] = None
+) -> Tuple[List[Violation], List[Violation]]:
+    """Lint files/trees -> (violations, waived)."""
+    waivers = load_waivers(waivers_path)
+    violations: List[Violation] = []
+    waived: List[Violation] = []
+    for f in _iter_py_files(paths):
+        found = lint_source(f.read_text(), str(f))
+        for v in found:
+            (waived if _waived(v, waivers) else violations).append(v)
+    return violations, waived
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    import argparse
+
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint", description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    parser.add_argument(
+        "paths", nargs="*",
+        default=[str(pathlib.Path(__file__).resolve().parents[1])],
+        help="files or trees to lint (default: src/repro)")
+    parser.add_argument("--waivers", default=None,
+                        help="waiver JSON (default: analysis/lint_waivers.json)")
+    parser.add_argument("--list-rules", action="store_true")
+    args = parser.parse_args(argv)
+    if args.list_rules:
+        for rule, desc in RULES.items():
+            print(f"{rule}: {desc}")
+        return 0
+    violations, waived = run_lint(args.paths, args.waivers)
+    for v in violations:
+        print(v)
+    for v in waived:
+        print(f"{v}  [waived]")
+    n_files = sum(1 for _ in _iter_py_files(args.paths))
+    print(
+        f"lint: {n_files} file(s), {len(violations)} violation(s), "
+        f"{len(waived)} waived, {len(RULES)} rule(s)")
+    return 1 if violations else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -107,12 +107,18 @@ class ProgramRegistry:
         key: Hashable,
         fn: Callable,
         donate_argnums: Sequence[int] = (),
+        static_argnames: Sequence[str] = (),
+        jit_kwargs: Optional[Dict[str, Any]] = None,
     ) -> Callable:
         """Cached ``jax.jit(fn, donate_argnums=...)`` under ``(anchor, key)``.
 
         Unlike :meth:`aot` this compiles lazily per input shape (jax's own
         per-shape cache), but the registry guarantees one jit object per
         (anchor, key) -- repeat ``make_em_step`` calls stop paying a retrace.
+
+        ``static_argnames`` / ``jit_kwargs`` (e.g. in/out shardings) pass
+        through to ``jax.jit``; they are NOT part of the cache key, so the
+        caller's ``key`` must distinguish variants.
         """
         table = self.table(anchor)
         jitted = table.get(key)
@@ -121,7 +127,12 @@ class ProgramRegistry:
             return jitted
         import jax
 
-        jitted = jax.jit(fn, donate_argnums=tuple(donate_argnums))
+        jitted = jax.jit(
+            fn,
+            donate_argnums=tuple(donate_argnums),
+            static_argnames=tuple(static_argnames),
+            **(jit_kwargs or {}),
+        )
         self.stats["compiles"] += 1
         table[key] = jitted
         return jitted

@@ -20,6 +20,7 @@ inpainting), and MPE-style argmax decoding.
 from __future__ import annotations
 
 import dataclasses
+import os
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
@@ -121,6 +122,7 @@ class EiNet:
         impl: str = "xla",
         grouped: bool = True,
         vmem_budget: Optional[int] = None,
+        verify: Optional[str] = None,
     ):
         self.graph = graph
         self.K = int(num_sums)
@@ -136,6 +138,23 @@ class EiNet:
             vmem_budget=self.vmem_budget,
         )
         self.exec_plan = self.plan.segments
+        # static verification (repro.analysis.verify): the ctor knob wins,
+        # else the REPRO_VERIFY env var ("off" | "report" | "raise")
+        self.verify_report = None
+        mode = verify if verify is not None else os.environ.get(
+            "REPRO_VERIFY", "off").strip().lower()
+        if mode in ("off", "", "0"):
+            return
+        if mode not in ("report", "raise"):
+            raise ValueError(
+                f"verify={mode!r}; expected 'off', 'report' or 'raise'")
+        from repro.analysis.verify import VerifyError, verify_einet
+
+        self.verify_report = verify_einet(self)
+        if not self.verify_report.ok:
+            if mode == "raise":
+                raise VerifyError(self.verify_report)
+            print(self.verify_report.format_report())
 
     # ------------------------------------------------------------------ build
     def _build(self) -> None:

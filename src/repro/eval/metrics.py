@@ -18,13 +18,11 @@ from __future__ import annotations
 import dataclasses
 import functools
 import time
-import weakref
 from typing import Any, Dict, Optional
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
+from repro.compile import REGISTRY
 from repro.core.einet import EiNet
 from repro.serve import Request, ServeEngine
 
@@ -75,29 +73,22 @@ def _request_batch(model: EiNet, req: Request) -> Dict[str, Any]:
     }
 
 
-# one jitted batch-1 query program per (model, kind[, component]): a fresh
-# jit(partial(...)) per call would retrace/recompile for EVERY audited
-# request (exhaustive parity passes issue hundreds).  WeakKey so models
-# don't leak; jax's own jit cache is keyed on the partial object identity,
-# hence this explicit dict.
-_DIRECT_FNS = weakref.WeakKeyDictionary()
-
-
 def _direct_fn(model: EiNet, kind: str, component=None):
-    per_model = _DIRECT_FNS.setdefault(model, {})
-    key = kind if component is None else (kind, int(component))
-    fn = per_model.get(key)
-    if fn is None:
-        if component is None:
-            fn = jax.jit(functools.partial(model.query, kind=kind))
-        else:
-            # mixture component-pinned kinds: the component is static, same
-            # as the engine's per-component compiled programs
-            fn = jax.jit(functools.partial(
-                model.query, kind=kind, component=int(component)
-            ))
-        per_model[key] = fn
-    return fn
+    """One jitted batch-1 query program per (model, kind[, component]): a
+    fresh jit(partial(...)) per call would retrace/recompile for EVERY
+    audited request (exhaustive parity passes issue hundreds).  Cached in
+    the shared ``ProgramRegistry`` anchored to the model (weakref -- dead
+    models release their programs), because jax's own jit cache is keyed on
+    the partial object identity and would never hit."""
+    if component is None:
+        fn = functools.partial(model.query, kind=kind)
+        key = ("direct_query", kind)
+    else:
+        # mixture component-pinned kinds: the component is static, same
+        # as the engine's per-component compiled programs
+        fn = functools.partial(model.query, kind=kind, component=int(component))
+        key = ("direct_query", kind, int(component))
+    return REGISTRY.jit(model, key, fn)
 
 
 def direct_query(model: EiNet, params: Dict[str, Any], req: Request):

@@ -12,6 +12,7 @@ from typing import Any, Dict
 import jax
 import jax.numpy as jnp
 
+from repro.compile import REGISTRY
 from repro.configs import EinetConfig
 from repro.core import EiNet, Normal, poon_domingos, random_binary_trees
 from repro.core.exponential_family import make_exponential_family
@@ -68,8 +69,14 @@ def lower_einet_cell(cfg: EinetConfig, mesh, multi_pod: bool):
             # over the DP axes by XLA (they are grads of the summed batch LL)
             return stochastic_em_update(model, p, batch["x"], EMConfig())
 
-        jitted = jax.jit(
-            fn, in_shardings=(param_sh, batch_sh), out_shardings=(param_sh, None)
+        jitted = REGISTRY.jit(
+            model,
+            ("lowered_cell", cfg.name, multi_pod),
+            fn,
+            jit_kwargs={
+                "in_shardings": (param_sh, batch_sh),
+                "out_shardings": (param_sh, None),
+            },
         )
         t0 = time.time()
         lowered = jitted.lower(params_struct, batch_struct)

@@ -25,6 +25,7 @@ from typing import Any, Dict, Optional
 import jax
 import numpy as np
 
+from repro.analysis.verify import VerifyError, verify_config, verify_einet
 from repro.configs import REGISTRY, get_config
 from repro.core import plan as plan_lib
 from repro.launch.hlo_analysis import analyze_hlo
@@ -52,6 +53,10 @@ def run_cell(arch: str, mesh_kind: str, out_dir: str,
             print(f"[plan] {arch}: "
                   f"{plan_lib.format_summary(model.grouping_summary())}",
                   flush=True)
+            report = verify_einet(model, name=arch)
+            print(f"[verify] {arch}: {report.summary()}", flush=True)
+            if not report.ok:
+                raise VerifyError(report)
             t0 = time.time()
             compiled = lowered.compile()
             t_compile = time.time() - t0
@@ -105,6 +110,19 @@ def run_cell(arch: str, mesh_kind: str, out_dir: str,
         return rec
 
 
+def run_verify(archs) -> int:
+    """Static circuit/plan verification per arch (no lowering, no mesh):
+    the ``--verify`` CI gate.  Returns the number of failing archs."""
+    failures = 0
+    for arch in archs:
+        report = verify_config(get_config(arch))
+        print(f"[verify] {arch}: {report.summary()}", flush=True)
+        for finding in report.findings:
+            print(f"  - {finding}", flush=True)
+        failures += 0 if report.ok else 1
+    return failures
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
@@ -112,6 +130,10 @@ def main():
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--out", default="artifacts/dryrun")
     ap.add_argument("--force", action="store_true")
+    ap.add_argument("--verify", action="store_true",
+                    help="run the static circuit/plan verifier over the "
+                         "selected archs and exit (non-zero on any failed "
+                         "invariant); no lowering or compilation")
     args = ap.parse_args()
 
     meshes = {"single": ["single"], "multi": ["multi"],
@@ -120,6 +142,13 @@ def main():
         archs = sorted(REGISTRY)
     else:
         archs = [args.arch]
+
+    if args.verify:
+        failures = run_verify(archs)
+        if failures:
+            raise SystemExit(f"{failures} arch(s) failed verification")
+        print(f"verification complete: {len(archs)} arch(s) clean")
+        return
 
     failures = 0
     for mesh_kind in meshes:

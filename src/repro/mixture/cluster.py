@@ -30,7 +30,23 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compile import REGISTRY
+
 _SEED_SALT = zlib.crc32(b"repro.mixture.kmeans")
+
+
+class _Anchor:
+    """Module-lifetime anchor for the k-means step programs in the shared
+    compile registry (the registry holds anchors by weakref, so plain
+    module-level jit objects would need their own cache -- this keeps
+    k-means accountable to the same ProgramRegistry as everything else)."""
+
+
+_KMEANS_ANCHOR = _Anchor()
+
+
+def _jitted(name: str, fn):
+    return REGISTRY.jit(_KMEANS_ANCHOR, ("kmeans", name), fn)
 
 
 @dataclasses.dataclass
@@ -86,7 +102,6 @@ def _plusplus_init(
     return np.stack(centers).astype(np.float32)
 
 
-@jax.jit
 def _assign(data: jax.Array, centers: jax.Array) -> jax.Array:
     """Nearest-centroid assignment: (N,) int32.  ||x - c||^2 expanded so the
     N x C distance matrix is one matmul (no (N, C, D) intermediate)."""
@@ -106,9 +121,6 @@ def _update(data, centers, assign):
     )
     safe = jnp.maximum(counts, 1.0)[:, None]
     return jnp.where(counts[:, None] > 0, sums / safe, centers), counts
-
-
-_update_jit = jax.jit(_update)
 
 
 def kmeans(
@@ -144,10 +156,12 @@ def kmeans(
     centers = _plusplus_init(data, num_clusters, _rng(seed))
     data_j = jnp.asarray(data)
     centers_j = jnp.asarray(centers)
+    assign_step = _jitted("assign", _assign)
+    update_step = _jitted("update", _update)
     if batch is None or batch >= n:
         for _ in range(num_iters):
-            assign = _assign(data_j, centers_j)
-            new_centers, _ = _update_jit(data_j, centers_j, assign)
+            assign = assign_step(data_j, centers_j)
+            new_centers, _ = update_step(data_j, centers_j, assign)
             moved = float(jnp.max(jnp.abs(new_centers - centers_j)))
             centers_j = new_centers
             if moved < tol:
@@ -160,7 +174,7 @@ def kmeans(
             base = (i * batch) % n
             rows = (np.arange(batch) + base) % n
             xb = data_j[jnp.asarray(rows)]
-            assign = _assign(xb, centers_j)
+            assign = assign_step(xb, centers_j)
             sums = jax.ops.segment_sum(xb, assign, num_segments=num_clusters)
             cnt = jax.ops.segment_sum(
                 jnp.ones((batch,), jnp.float32), assign,
@@ -174,7 +188,7 @@ def kmeans(
                 centers_j + lr[:, None] * (target - centers_j),
                 centers_j,
             )
-    final_assign = np.asarray(_assign(data_j, centers_j))
+    final_assign = np.asarray(assign_step(data_j, centers_j))
     counts = np.bincount(final_assign, minlength=num_clusters).astype(np.int64)
     d = data - np.asarray(centers_j)[final_assign]
     inertia = float(np.mean(np.sum(d * d, axis=1)))

@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compile import REGISTRY
 from repro.core.einet import EiNet
 from repro.serve.engine import Request, request_key
 
@@ -59,10 +60,23 @@ def mixed_requests(
 def _per_request_call(
     model: EiNet, params, jit_sampling: bool
 ) -> Callable[[Request], jax.Array]:
-    ll = jax.jit(model.log_likelihood)
-    cll = jax.jit(model.conditional_log_likelihood)
+    # compiled through the shared registry (one jit object per model + kind,
+    # visible to the recompile sentry) rather than ad-hoc jax.jit objects
+    ll = REGISTRY.jit(
+        model, ("direct", "log_likelihood"), model.log_likelihood
+    )
+    cll = REGISTRY.jit(
+        model,
+        ("direct", "conditional_log_likelihood"),
+        model.conditional_log_likelihood,
+    )
     cs = (
-        jax.jit(model.conditional_sample, static_argnames=("mode",))
+        REGISTRY.jit(
+            model,
+            ("direct", "conditional_sample"),
+            model.conditional_sample,
+            static_argnames=("mode",),
+        )
         if jit_sampling
         else model.conditional_sample
     )

@@ -24,6 +24,15 @@ except ImportError:
     sys.modules["hypothesis"] = _mod
 
 
+@pytest.fixture
+def compile_sentry():
+    """Active :class:`repro.analysis.sentry.CompileSentry` for the test."""
+    from repro.analysis.sentry import CompileSentry
+
+    with CompileSentry() as sentry:
+        yield sentry
+
+
 def pytest_addoption(parser):
     parser.addoption(
         "--runslow",

@@ -1,0 +1,190 @@
+"""Repo-lint tests: each rule catches its seeded violation snippet, the
+allowlists hold, waivers suppress (and only with a reason), and -- the
+satellite acceptance -- the actual tree lints clean with ZERO waivers.
+"""
+
+import json
+import pathlib
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro.analysis.lint import (
+    RULES,
+    Violation,
+    lint_source,
+    load_waivers,
+    run_lint,
+)
+
+SRC = pathlib.Path(__file__).resolve().parents[1] / "src" / "repro"
+
+
+def rules_of(violations):
+    return {v.rule for v in violations}
+
+
+def lint(src, path="src/repro/serve/somefile.py"):
+    return lint_source(textwrap.dedent(src), path)
+
+
+# ------------------------------------------------------------ rule negatives
+def test_neg_inf_literal_caught():
+    found = lint("LOG_ZERO = -1e30\n")
+    assert rules_of(found) == {"neg-inf-literal"}
+    # the canonical home is exempt
+    assert lint("NEG_INF = -1e30\n", "src/repro/core/layers.py") == []
+    # ordinary floats are not
+    assert lint("x = -1e6\n") == []
+
+
+def test_interpret_default_caught():
+    bad = "def kernel(x, interpret=True):\n    return x\n"
+    found = lint(bad, "src/repro/kernels/foo.py")
+    assert rules_of(found) == {"interpret-default"}
+    # None default inside kernels is the contract
+    ok = "def kernel(x, interpret=None):\n    return x\n"
+    assert lint(ok, "src/repro/kernels/foo.py") == []
+    # outside kernels the knob must not exist at all, even defaulted to None
+    found = lint(ok, "src/repro/serve/foo.py")
+    assert rules_of(found) == {"interpret-default"}
+    # no-default (the resolver itself) is fine inside kernels
+    res = "def resolve_interpret(interpret):\n    return bool(interpret)\n"
+    assert lint(res, "src/repro/kernels/dispatch.py") == []
+
+
+def test_pallas_contract_caught():
+    found = lint("out = pl.pallas_call(kern, out_shape=shape)(x)\n")
+    assert rules_of(found) == {"pallas-contract"}
+    found = lint("out = log_einsum_exp_pallas(w, l, r)\n")
+    assert rules_of(found) == {"pallas-contract"}
+    # inside the kernels package both are the implementation itself
+    assert lint("out = pl.pallas_call(kern, out_shape=s)(x)\n",
+                "src/repro/kernels/grouped.py") == []
+
+
+def test_bare_jit_caught():
+    assert rules_of(lint("f = jax.jit(g)\n")) == {"bare-jit"}
+    assert rules_of(lint(
+        "@jax.jit\ndef f(x):\n    return x\n")) == {"bare-jit"}
+    assert rules_of(lint("p = jax.pmap(g)\n")) == {"bare-jit"}
+    # the allowlist: registry, train step builders, kernel ABI wrappers
+    for path in ("src/repro/compile.py", "src/repro/train/pipeline.py",
+                 "src/repro/kernels/grouped.py"):
+        assert lint("f = jax.jit(g)\n", path) == []
+
+
+def test_donated_read_caught():
+    bad = """
+    def fit(model, params, x):
+        step = make_em_step(model)
+        step(params, x)
+        return params
+    """
+    assert rules_of(lint(bad)) == {"donated-read"}
+
+
+def test_donated_read_rebinding_is_clean():
+    ok = """
+    def fit(model, params, x):
+        step = make_em_step(model)
+        for _ in range(3):
+            params, ll = step(params, x)
+        return params, ll
+    """
+    assert lint(ok) == []
+
+
+def test_donated_read_in_loop_without_rebinding_caught():
+    bad = """
+    def fit(model, params, x):
+        step = make_sharded_em_step(model)
+        for _ in range(3):
+            ll = step(params, x)
+        return params
+    """
+    assert "donated-read" in rules_of(lint(bad))
+
+
+@pytest.mark.parametrize("rule", sorted(RULES))
+def test_every_rule_has_a_negative(rule):
+    """Each rule id above is exercised by a seeded-violation test; pin the
+    rule list so adding a rule forces adding its negative test."""
+    seeded = {
+        "neg-inf-literal": "x = 1e30\n",
+        "interpret-default": "def k(x, interpret=False):\n    return x\n",
+        "pallas-contract": "pl.pallas_call(k)\n",
+        "bare-jit": "jax.jit(f)\n",
+        "donated-read": (
+            "def f(m, p, x):\n"
+            "    s = make_em_step(m)\n"
+            "    s(p, x)\n"
+            "    print(p)\n"
+        ),
+    }
+    assert rule in seeded
+    assert rule in rules_of(lint(seeded[rule]))
+
+
+# ----------------------------------------------------------------- waivers
+def test_waiver_suppresses_with_reason(tmp_path):
+    f = tmp_path / "bad.py"
+    f.write_text("x = -1e30\n")
+    waivers = tmp_path / "waivers.json"
+    waivers.write_text(json.dumps([{
+        "rule": "neg-inf-literal", "path": "bad.py",
+        "reason": "test fixture"}]))
+    violations, waived = run_lint([str(f)], str(waivers))
+    assert violations == [] and len(waived) == 1
+
+
+def test_waiver_requires_reason(tmp_path):
+    waivers = tmp_path / "waivers.json"
+    waivers.write_text(json.dumps([{"rule": "bare-jit", "path": "x.py"}]))
+    with pytest.raises(ValueError, match="reason"):
+        load_waivers(str(waivers))
+
+
+def test_waiver_line_mismatch_does_not_suppress(tmp_path):
+    f = tmp_path / "bad.py"
+    f.write_text("x = -1e30\n")
+    waivers = tmp_path / "waivers.json"
+    waivers.write_text(json.dumps([{
+        "rule": "neg-inf-literal", "path": "bad.py", "line": 999,
+        "reason": "wrong line"}]))
+    violations, waived = run_lint([str(f)], str(waivers))
+    assert len(violations) == 1 and waived == []
+
+
+# ------------------------------------------------------------- tree is clean
+def test_tree_lints_clean_with_zero_waivers():
+    violations, waived = run_lint([str(SRC)])
+    assert violations == [], "\n".join(str(v) for v in violations)
+    assert waived == []
+    assert load_waivers() == []  # the shipped waiver file is empty
+
+
+def test_cli_exit_codes(tmp_path):
+    env_src = str(SRC.parents[0])
+    ok = subprocess.run(
+        [sys.executable, "-m", "repro.analysis.lint", str(SRC / "core")],
+        capture_output=True, text=True, env={"PYTHONPATH": env_src,
+                                             "PATH": "/usr/bin:/bin"},
+    )
+    assert ok.returncode == 0, ok.stdout + ok.stderr
+    bad = tmp_path / "bad.py"
+    bad.write_text("f = jax.jit(g)\n")
+    fail = subprocess.run(
+        [sys.executable, "-m", "repro.analysis.lint", str(bad)],
+        capture_output=True, text=True, env={"PYTHONPATH": env_src,
+                                             "PATH": "/usr/bin:/bin"},
+    )
+    assert fail.returncode == 1
+    assert "bare-jit" in fail.stdout
+
+
+def test_violation_str_is_clickable():
+    v = Violation("bare-jit", "repro/serve/x.py", 12, "msg")
+    assert str(v) == "repro/serve/x.py:12: bare-jit: msg"

@@ -1,0 +1,308 @@
+"""Circuit/plan verifier tests: every registered arch verifies clean, and
+every invariant class catches its seeded corruption.
+
+The corruption tests are the contract: a verifier that cannot reject a
+mutated gather table / scope / plan is checking nothing.  Each test builds
+a fresh small model (RAT for fused plans, 6x6 Poon-Domingos for gather
+plans, or a hand-built synthetic circuit for surgical scope corruptions),
+mutates exactly one structure, and asserts the named invariant fires.
+"""
+
+import dataclasses
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+from repro.analysis.verify import (
+    INVARIANTS,
+    VerifyError,
+    verify_circuit,
+    verify_config,
+    verify_einet,
+    verify_plan,
+    verify_region_graph,
+)
+from repro.configs import REGISTRY as CONFIGS
+from repro.core import EiNet, poon_domingos, random_binary_trees
+from repro.core.einet import PairSpec
+from repro.core.region_graph import RegionGraph
+
+
+def rat_net(**kw):
+    return EiNet(random_binary_trees(8, 2, 2, seed=0), num_sums=4, **kw)
+
+
+def pd_net(**kw):
+    return EiNet(poon_domingos(6, 6, 2), num_sums=4, **kw)
+
+
+def invariants_of(findings):
+    return {f.invariant for f in findings}
+
+
+# ------------------------------------------------------------- clean passes
+def test_small_models_verify_clean():
+    for net in (rat_net(), pd_net()):
+        report = verify_einet(net)
+        assert report.ok, report.format_report()
+        assert report.invariants == INVARIANTS
+
+
+@pytest.mark.parametrize("arch", sorted(CONFIGS))
+def test_all_registered_archs_verify_clean(arch):
+    report = verify_config(CONFIGS[arch])
+    assert report.ok, report.format_report()
+
+
+def test_einet_verify_knob_raise_and_report():
+    net = rat_net(verify="raise")  # clean model: must not raise
+    assert net.verify_report is not None and net.verify_report.ok
+    with pytest.raises(ValueError, match="verify"):
+        rat_net(verify="bogus")
+
+
+def test_einet_verify_env(monkeypatch):
+    monkeypatch.setenv("REPRO_VERIFY", "raise")
+    net = rat_net()
+    assert net.verify_report is not None and net.verify_report.ok
+    monkeypatch.setenv("REPRO_VERIFY", "off")
+    assert rat_net().verify_report is None
+
+
+# ------------------------------------------------------------- region graph
+def _graph(num_vars, regions, partitions, root=0):
+    return RegionGraph(num_vars=num_vars, regions=regions,
+                       partitions=partitions, root=root)
+
+
+def test_graph_decomposability_overlap_caught():
+    g = _graph(2, [(0, 1), (0,), (0,)], [(0, 1, 2)])  # children share var 0
+    assert "graph/decomposability" in invariants_of(verify_region_graph(g))
+
+
+def test_graph_smoothness_cover_caught():
+    g = _graph(3, [(0, 1, 2), (0,), (1,)], [(0, 1, 2)])  # var 2 uncovered
+    assert "graph/smoothness" in invariants_of(verify_region_graph(g))
+
+
+def test_graph_empty_scope_caught():
+    g = _graph(2, [(0, 1), (), (0, 1)], [(0, 1, 2)])
+    assert "graph/nonempty-scope" in invariants_of(verify_region_graph(g))
+
+
+def test_graph_root_scope_caught():
+    g = _graph(3, [(0, 1), (0,), (1,)], [(0, 1, 2)], root=0)
+    assert "graph/root-scope" in invariants_of(verify_region_graph(g))
+
+
+def test_graph_clean_pass():
+    g = _graph(2, [(0, 1), (0,), (1,)], [(0, 1, 2)])
+    assert verify_region_graph(g) == []
+
+
+# ---------------------------------------------------- synthetic circuit walk
+def _synthetic():
+    """Hand-built valid circuit: 4 vars, leaves rows 0-3, pair 0 emits
+    einsum rows 4-6 (two partitions of {0,1} plus one of {2,3}) and mixing
+    row 7 (mixes the two {0,1} partitions), final pair emits root row 8."""
+    def spec(**kw):
+        return PairSpec(**{
+            "mix_child_local": None, "mix_mask": None, "mix_global": None,
+            "is_final": False, **kw})
+
+    pair0 = spec(
+        left=np.array([0, 0, 2]), right=np.array([1, 1, 3]),
+        einsum_global=np.arange(4, 7), k_in=2, k_out=2,
+        mix_child_local=np.array([[0, 1]]),
+        mix_mask=np.array([[1.0, 1.0]], np.float32),
+        mix_global=np.array([7]),
+    )
+    pair1 = spec(
+        left=np.array([7]), right=np.array([6]),
+        einsum_global=np.array([8]), k_in=2, k_out=1, is_final=True,
+    )
+    return SimpleNamespace(
+        leaf_spec=SimpleNamespace(leaf_scopes=[(0,), (1,), (2,), (3,)]),
+        pair_specs=[pair0, pair1], num_vars=4, K=2, num_classes=1,
+    )
+
+
+def test_synthetic_circuit_clean():
+    assert verify_circuit(_synthetic()) == []
+
+
+def test_circuit_scope_overlap_caught():
+    m = _synthetic()
+    m.pair_specs[0].right = np.array([0, 1, 3])  # partition 0 = (row0, row0)
+    assert "circuit/scope-decomposability" in invariants_of(verify_circuit(m))
+
+
+def test_circuit_row_out_of_range_caught():
+    m = _synthetic()
+    m.pair_specs[0].left = np.array([0, 0, 99])
+    assert "circuit/row-range" in invariants_of(verify_circuit(m))
+
+
+def test_circuit_allocation_order_caught():
+    m = _synthetic()
+    m.pair_specs[0].einsum_global = np.arange(5, 8)
+    assert "circuit/allocation-order" in invariants_of(verify_circuit(m))
+
+
+def test_circuit_k_chain_caught():
+    m = _synthetic()
+    m.pair_specs[1].k_out = 3  # final pair must emit num_classes
+    assert "circuit/k-chain" in invariants_of(verify_circuit(m))
+
+
+def test_circuit_mix_mask_caught():
+    m = _synthetic()
+    m.pair_specs[0].mix_mask = np.zeros((1, 2), np.float32)  # no children
+    assert "circuit/mix-tables" in invariants_of(verify_circuit(m))
+
+
+def test_circuit_mix_child_range_caught():
+    m = _synthetic()
+    m.pair_specs[0].mix_child_local = np.array([[0, 9]])
+    assert "circuit/mix-tables" in invariants_of(verify_circuit(m))
+
+
+def test_circuit_smoothness_caught():
+    m = _synthetic()
+    # mix partitions 0 ({0,1}) and 2 ({2,3}): differing scopes under one sum
+    m.pair_specs[0].mix_child_local = np.array([[0, 2]])
+    assert "circuit/scope-smoothness" in invariants_of(verify_circuit(m))
+
+
+def test_circuit_root_coverage_caught():
+    m = _synthetic()
+    m.num_vars = 5  # root scope {0..3} no longer covers every variable
+    assert "circuit/root-coverage" in invariants_of(verify_circuit(m))
+
+
+def test_corrupt_real_model_scope_swap():
+    """Swapping gather rows between partitions of a REAL PD circuit breaks
+    decomposability and is caught end-to-end through verify_einet."""
+    net = pd_net()
+    sp = net.pair_specs[0]
+    sp.right = sp.right.copy()
+    sp.right[0] = int(sp.left[0])  # product of a row with itself
+    report = verify_einet(net)
+    assert not report.ok
+    assert "circuit/scope-decomposability" in invariants_of(report.findings)
+
+
+# --------------------------------------------------------------------- plan
+def _gather_seg_index(net):
+    return next(i for i, s in enumerate(net.plan.segments)
+                if s.kind == "gather")
+
+
+def _replace_segment(net, idx, **kw):
+    segs = list(net.plan.segments)
+    segs[idx] = dataclasses.replace(segs[idx], **kw)
+    net.plan = dataclasses.replace(net.plan, segments=tuple(segs))
+
+
+def test_plan_coverage_gap_caught():
+    net = pd_net()
+    net.plan = dataclasses.replace(net.plan, segments=net.plan.segments[1:])
+    assert "plan/coverage" in invariants_of(verify_plan(net))
+
+
+def test_plan_mix_flags_caught():
+    net = pd_net()
+    flags = list(net.plan.mix_flags)
+    flags[0] = not flags[0]
+    net.plan = dataclasses.replace(net.plan, mix_flags=tuple(flags))
+    assert "plan/mix-flags" in invariants_of(verify_plan(net))
+
+
+def test_plan_gather_row_out_of_range_caught():
+    net = pd_net()
+    i = _gather_seg_index(net)
+    tb = net.plan.segments[i].tables
+    left = list(tb.left)
+    left[0] = (10 ** 6,) + left[0][1:]
+    _replace_segment(net, i, tables=dataclasses.replace(
+        tb, left=tuple(left)))
+    found = invariants_of(verify_plan(net))
+    assert "plan/gather-row-range" in found
+    assert "plan/gather-tables" in found  # no longer the spec's permutation
+
+
+def test_plan_gather_swapped_rows_caught():
+    net = pd_net()
+    i = _gather_seg_index(net)
+    tb = net.plan.segments[i].tables
+    row = tb.left[0]
+    assert len(row) >= 2
+    left = (row[::-1],) + tb.left[1:]  # in-range but permuted vs the spec
+    _replace_segment(net, i, tables=dataclasses.replace(
+        tb, left=tuple(left)))
+    assert "plan/gather-tables" in invariants_of(verify_plan(net))
+
+
+def test_plan_gather_mix_table_caught():
+    net = pd_net()
+    i = _gather_seg_index(net)
+    tb = net.plan.segments[i].tables
+    d = next(d for d, m in enumerate(tb.mix_child) if m is not None)
+    mix_child = list(tb.mix_child)
+    mix_child[d] = None  # drop the mixing depth from the frozen tables
+    _replace_segment(net, i, tables=dataclasses.replace(
+        tb, mix_child=tuple(mix_child)))
+    assert "plan/mix-flags" in invariants_of(verify_plan(net))
+
+
+def test_plan_vmem_budget_exceeded_caught():
+    for net in (rat_net(), pd_net()):
+        net.plan = dataclasses.replace(net.plan, vmem_budget=1)
+        assert "plan/vmem-budget" in invariants_of(verify_plan(net))
+
+
+def test_plan_fused_tiling_caught():
+    net = rat_net()
+    i = next(i for i, s in enumerate(net.plan.segments) if s.kind == "fused")
+    _replace_segment(net, i, out_block=0)
+    assert "plan/fused-tiling" in invariants_of(verify_plan(net))
+
+
+def test_plan_fused_structure_caught():
+    net = rat_net()
+    seg = next(s for s in net.plan.segments if s.kind == "fused")
+    net.pair_specs[seg.start].canonical = False
+    assert "plan/fused-structure" in invariants_of(verify_plan(net))
+
+
+def test_plan_lanes_contract_caught():
+    net = rat_net()
+    i = next(i for i, s in enumerate(net.plan.segments) if s.fused)
+    _replace_segment(net, i, block_b=12)  # not a multiple of 8 sublanes
+    assert "plan/lanes-contract" in invariants_of(verify_plan(net))
+
+
+def test_plan_segment_kind_caught():
+    net = pd_net()
+    _replace_segment(net, 0, kind="bogus")
+    assert "plan/segment-kind" in invariants_of(verify_plan(net))
+
+
+def test_verify_error_carries_report():
+    net = pd_net()
+    sp = net.pair_specs[0]
+    sp.left = sp.left.copy()
+    sp.left[0] = 10 ** 6
+    report = verify_einet(net)
+    with pytest.raises(VerifyError) as exc:
+        raise VerifyError(report)
+    assert not exc.value.report.ok
+    assert "circuit/row-range" in invariants_of(exc.value.report.findings)
+
+
+def test_every_invariant_has_coverage():
+    """Pin the invariant id list: a new invariant must add its id here AND
+    a corruption test above."""
+    assert len(INVARIANTS) == 20
+    assert len(set(INVARIANTS)) == 20
