@@ -61,13 +61,33 @@ def bench_summary() -> str:
     parts = []
     if os.path.isfile("BENCH_serve.json"):
         r = json.load(open("BENCH_serve.json"))
+        pc = r.get("program_cache") or {}
+        cache_s = (f" Program cache: {pc.get('hits', 0)} hits / "
+                   f"{pc.get('misses', 0)} misses "
+                   f"({pc.get('registry_compiles', 0)} registry compiles)."
+                   if pc else "")
         parts.append(
             f"**Serving** (`BENCH_serve.json`, {r.get('arch')}): engine "
             f"{r.get('engine_qps', 0):.1f} req/s — "
             f"x{r.get('speedup', 0):.1f} vs the pre-engine per-request path, "
             f"x{r.get('speedup_vs_jitted', 0):.1f} vs a fully-jitted "
             f"per-request baseline; parity {r.get('parity_max_abs_diff')}."
+            + cache_s
         )
+        lat = r.get("latency_ms") or {}
+        if lat:
+            rows = ["| kind | p50 ms | p95 ms | p99 ms |",
+                    "|" + "---|" * 4]
+            for kind, lm in sorted(lat.items()):
+                rows.append(
+                    f"| {kind} | {lm.get('p50', 0):.3f} | "
+                    f"{lm.get('p95', 0):.3f} | {lm.get('p99', 0):.3f} |"
+                )
+            parts.append(
+                "Steady-state per-request latency (enqueue → complete, "
+                "from the engine's `serve.request.seconds` histograms; "
+                "warm-up excluded):\n\n" + "\n".join(rows)
+            )
     if os.path.isfile("BENCH_eval.json"):
         r = json.load(open("BENCH_eval.json"))
         parity = ("0 mismatches" if r.get("parity_ok")
@@ -84,22 +104,30 @@ def bench_summary() -> str:
     if os.path.isfile("BENCH_train.json"):
         r = json.load(open("BENCH_train.json"))
         rows = ["| arch | batch (microbatches) | compiled ms/step | "
-                "per-step ms/step | speedup | launches | grad parity |",
-                "|" + "---|" * 7]
+                "per-step ms/step | speedup | launches | segment split "
+                "(eager) | grad parity |",
+                "|" + "---|" * 8]
         for c in r.get("results", []):
             g = c.get("grouping") or {}
             launches = (f"{g['launches_per_layer']} -> {g['launches_grouped']}"
                         if g else "—")
+            seg = c.get("segment_breakdown") or {}
+            seg_s = ", ".join(
+                f"{k}: {v['launches']}× {v['eager_ms']:.1f} ms"
+                for k, v in sorted(seg.items())
+            ) or "—"
             rows.append(
                 f"| {c['arch']} | {c['batch']} ({c['microbatches']}) | "
                 f"{c['fused_ms_per_step']} | {c['per_step_ms_per_step']} | "
-                f"x{c['speedup']} | {launches} | "
+                f"x{c['speedup']} | {launches} | {seg_s} | "
                 f"{c['grad_parity_max_abs_diff']:.1e} |"
             )
         parts.append(
             "**Training** (`BENCH_train.json`, backend "
             f"{r.get('backend')}): compiled EM step vs the seed's per-step "
-            "path.\n\n" + "\n".join(rows)
+            "path; the segment split is one eager forward per arch timed "
+            "through the obs `plan.segment` spans (relative per-kind cost, "
+            "not compiled absolute time).\n\n" + "\n".join(rows)
         )
         sc = r.get("leaf_scatter")
         if sc:

@@ -1,6 +1,6 @@
 """AST-based repo lint: the conventions this codebase's bug history bought.
 
-Five rules, each pinned to a past defect or a contract the rest of the
+Six rules, each pinned to a past defect or a contract the rest of the
 stack relies on:
 
   * ``neg-inf-literal``     -- no NEG_INF-scale numeric literals (|v| >=
@@ -26,6 +26,12 @@ stack relies on:
     ``make_sharded_em_step`` / ``make_mixture_em_step`` donates its first
     argument; reading that buffer after the call (without rebinding it from
     the result) is undefined behaviour jax only warns about at runtime.
+  * ``timing-outside-obs``  -- no raw ``time.time`` / ``time.perf_counter``
+    (or their ``_ns``/monotonic/process_time cousins) outside ``repro/obs/``
+    and ``benchmarks/``: ad-hoc clocks re-grow the duplicated warm-up-vs-
+    steady-state bookkeeping ``repro.obs`` replaced, and their measurements
+    never reach the metrics registry or the trace.  Use ``obs.timed`` /
+    ``obs.span`` / ``obs.now``.
 
 CLI (a CI fast-job gate)::
 
@@ -71,13 +77,29 @@ RULES = {
         "donated buffer read after the donating step call; rebind it from "
         "the step's result"
     ),
+    "timing-outside-obs": (
+        "raw time.time/time.perf_counter outside repro/obs/ and "
+        "benchmarks/; use obs.timed / obs.span / obs.now"
+    ),
 }
 
-# rule -> path prefixes (repo-module style, see _relpath) where it is OFF
+# rule -> path prefixes (repo-module style, see _relpath) where it is OFF;
+# a prefix matches at the start of the rel path or at any "/" boundary
+# (so "benchmarks/" covers the repo-root benchmark scripts, which have no
+# src/ component to normalize from)
 _ALLOW = {
     "neg-inf-literal": ("repro/core/layers.py",),
     "bare-jit": ("repro/compile.py", "repro/train/", "repro/kernels/"),
     "pallas-contract": ("repro/kernels/",),
+    "timing-outside-obs": ("repro/obs/", "benchmarks/"),
+}
+
+# the wall-clock readers the timing rule forbids outside repro/obs/ --
+# time.sleep and datetime formatting are fine; only *measurement* clocks
+# must flow through obs so their readings reach the metrics/trace layer
+_TIME_ATTRS = {
+    "time", "time_ns", "perf_counter", "perf_counter_ns",
+    "monotonic", "monotonic_ns", "process_time", "process_time_ns",
 }
 
 _STEP_MAKERS = {"make_em_step", "make_sharded_em_step", "make_mixture_em_step"}
@@ -104,8 +126,12 @@ def _relpath(path: str) -> str:
 
 
 def _allowed(rule: str, rel: str) -> bool:
-    return any(rel.startswith(p) or rel == p.rstrip("/")
-               for p in _ALLOW.get(rule, ()))
+    probe = "/" + rel
+    return any(
+        probe.startswith("/" + p) or "/" + p in probe
+        or rel == p.rstrip("/")
+        for p in _ALLOW.get(rule, ())
+    )
 
 
 def _terminal_name(node: ast.AST) -> Optional[str]:
@@ -255,12 +281,31 @@ def _check_donated(tree: ast.AST, rel: str) -> Iterator[Violation]:
     yield from checker.violations
 
 
+def _check_timing(tree: ast.AST, rel: str) -> Iterator[Violation]:
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Attribute) and isinstance(
+            node.value, ast.Name
+        ) and node.value.id == "time" and node.attr in _TIME_ATTRS:
+            yield Violation(
+                "timing-outside-obs", rel, node.lineno,
+                f"raw time.{node.attr}; use obs.timed / obs.span / obs.now "
+                f"so the measurement reaches the metrics registry")
+        elif isinstance(node, ast.ImportFrom) and node.module == "time":
+            for alias in node.names:
+                if alias.name in _TIME_ATTRS:
+                    yield Violation(
+                        "timing-outside-obs", rel, node.lineno,
+                        f"from time import {alias.name}; use obs.timed / "
+                        f"obs.span / obs.now instead")
+
+
 _CHECKS = (
     _check_neg_inf,
     _check_interpret,
     _check_pallas,
     _check_bare_jit,
     _check_donated,
+    _check_timing,
 )
 
 

@@ -31,6 +31,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
+from repro import obs
+
 Signature = Tuple[Tuple[Any, ...], ...]
 
 
@@ -89,6 +91,11 @@ class CompileSentry:
         self._cache0: Dict[str, Optional[int]] = {}
         self._fns: Dict[str, Any] = {}
         self.findings: List[SentryFinding] = []
+        # registry compile events observed while active, via the shared
+        # obs hook (repro.compile emits; obs.events counts the metrics;
+        # the sentry only *listens* -- nothing double counts)
+        self.compile_events: List[Dict[str, Any]] = []
+        self._listener: Optional[Callable] = None
         self.active = False
 
     # ------------------------------------------------------------- lifecycle
@@ -96,10 +103,14 @@ class CompileSentry:
         self.active = True
         if self.registry is not None:
             self._reg_compiles0 = int(self.registry.stats["compiles"])
+        self._listener = obs.on_compile(self.compile_events.append)
         return self
 
     def __exit__(self, *exc) -> None:
         self.active = False
+        if self._listener is not None:
+            obs.remove_compile_listener(self._listener)
+            self._listener = None
 
     # --------------------------------------------------------------- wrapping
     def wrap(self, fn: Callable, name: Optional[str] = None) -> Callable:

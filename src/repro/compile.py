@@ -29,9 +29,10 @@ registry isolates cache statistics (benchmarks, tests).
 
 from __future__ import annotations
 
-import time
 import weakref
 from typing import Any, Callable, Dict, Hashable, Optional, Sequence, Tuple
+
+from repro import obs
 
 
 class ProgramRegistry:
@@ -83,20 +84,22 @@ class ProgramRegistry:
         prog = table.get(key)
         if prog is not None:
             self.stats["hits"] += 1
+            obs.cache_event("aot", hit=True)
             return prog
         import jax
 
         jitted = jax.jit(fn)
-        t0 = time.perf_counter()
-        if rules is not None:
-            from repro.dist import sharding as shlib
+        with obs.timed("compile.aot", key=repr(key)) as t:
+            if rules is not None:
+                from repro.dist import sharding as shlib
 
-            with shlib.use_rules(rules):
+                with shlib.use_rules(rules):
+                    prog = jitted.lower(*abstract_args).compile()
+            else:
                 prog = jitted.lower(*abstract_args).compile()
-        else:
-            prog = jitted.lower(*abstract_args).compile()
-        self.stats["compile_s"] += time.perf_counter() - t0
+        self.stats["compile_s"] += t.seconds
         self.stats["compiles"] += 1
+        obs.compile_event("aot", key, t.seconds)
         table[key] = prog
         return prog
 
@@ -124,6 +127,7 @@ class ProgramRegistry:
         jitted = table.get(key)
         if jitted is not None:
             self.stats["hits"] += 1
+            obs.cache_event("jit", hit=True)
             return jitted
         import jax
 
@@ -134,6 +138,7 @@ class ProgramRegistry:
             **(jit_kwargs or {}),
         )
         self.stats["compiles"] += 1
+        obs.compile_event("jit", key, 0.0)
         table[key] = jitted
         return jitted
 

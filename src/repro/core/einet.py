@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import plan as plan_lib
 from repro.core import region_graph as rg_lib
 from repro.dist.sharding import constraint as _cst
@@ -467,26 +468,35 @@ class EiNet:
         root_out = None
         for seg in self.exec_plan:
             last = self.pair_specs[seg.stop - 1]
-            if seg.fused:
-                ws = [einsum_w[t] for t in range(seg.start, seg.stop)]
-                s = grouped_log_einsum_exp(
-                    ws, prev_out, seg.out_block, seg.block_b, impl=self.impl
-                )
-            else:
-                half = last.num_partitions
-                s = log_einsum_exp(
-                    einsum_w[seg.start],
-                    prev_out[:, :half, :],
-                    prev_out[:, half: 2 * half, :],
-                    impl=self.impl,
-                )
-            s = _cst(s, ("batch", "einet_nodes", None))
-            mix_out = None
-            if last.mix_global is not None:
-                ln = s[:, last.mix_child_local, :]
-                mix_out = log_mix_exp(
-                    mixing_v[seg.stop - 1], ln, jnp.asarray(last.mix_mask)
-                )
+            # spans fire at TRACE time (this loop runs under jit/AOT
+            # lowering): the counter tallies segment lowerings, and an
+            # eager profiler (obs.set_sync + jax.disable_jit) reads real
+            # per-segment device time through obs.sync
+            obs.METRICS.counter("plan.segment.traces", kind=seg.kind).inc()
+            with obs.span("plan.segment", kind=seg.kind,
+                          start=seg.start, stop=seg.stop):
+                if seg.fused:
+                    ws = [einsum_w[t] for t in range(seg.start, seg.stop)]
+                    s = grouped_log_einsum_exp(
+                        ws, prev_out, seg.out_block, seg.block_b,
+                        impl=self.impl
+                    )
+                else:
+                    half = last.num_partitions
+                    s = log_einsum_exp(
+                        einsum_w[seg.start],
+                        prev_out[:, :half, :],
+                        prev_out[:, half: 2 * half, :],
+                        impl=self.impl,
+                    )
+                s = _cst(s, ("batch", "einet_nodes", None))
+                mix_out = None
+                if last.mix_global is not None:
+                    ln = s[:, last.mix_child_local, :]
+                    mix_out = log_mix_exp(
+                        mixing_v[seg.stop - 1], ln, jnp.asarray(last.mix_mask)
+                    )
+                obs.sync(s if mix_out is None else mix_out)
             if last.is_final:
                 root_out = mix_out if last.mix_global is not None else s[:, 0, :]
             else:
@@ -515,32 +525,41 @@ class EiNet:
         buffer = leaf_out
         root_out = None
         for seg in self.exec_plan:
+            obs.METRICS.counter("plan.segment.traces", kind=seg.kind).inc()
             if seg.kind == "gather":
-                ws = tuple(
-                    einsum_w[t] for t in range(seg.start, seg.stop)
-                )
-                vs = tuple(
-                    mixing_v[t]
-                    for t in range(seg.start, seg.stop)
-                    if self.pair_specs[t].mix_global is not None
-                )
-                buffer = gather_grouped_log_einsum_exp(
-                    seg.tables, ws, vs, buffer,
-                    block_b=seg.block_b, impl=self.impl,
-                )
-                buffer = _cst(buffer, ("batch", "einet_nodes", None))
+                with obs.span("plan.segment", kind=seg.kind,
+                              start=seg.start, stop=seg.stop):
+                    ws = tuple(
+                        einsum_w[t] for t in range(seg.start, seg.stop)
+                    )
+                    vs = tuple(
+                        mixing_v[t]
+                        for t in range(seg.start, seg.stop)
+                        if self.pair_specs[t].mix_global is not None
+                    )
+                    buffer = gather_grouped_log_einsum_exp(
+                        seg.tables, ws, vs, buffer,
+                        block_b=seg.block_b, impl=self.impl,
+                    )
+                    buffer = _cst(buffer, ("batch", "einet_nodes", None))
+                    obs.sync(buffer)
                 continue
-            spec = self.pair_specs[seg.start]
-            n_l = buffer[:, spec.left, :]
-            n_r = buffer[:, spec.right, :]
-            s = log_einsum_exp(einsum_w[seg.start], n_l, n_r, impl=self.impl)
-            s = _cst(s, ("batch", "einet_nodes", None))
-            mix_out = None
-            if spec.mix_global is not None:
-                ln = s[:, spec.mix_child_local, :]
-                mix_out = log_mix_exp(
-                    mixing_v[seg.start], ln, jnp.asarray(spec.mix_mask)
+            with obs.span("plan.segment", kind=seg.kind,
+                          start=seg.start, stop=seg.stop):
+                spec = self.pair_specs[seg.start]
+                n_l = buffer[:, spec.left, :]
+                n_r = buffer[:, spec.right, :]
+                s = log_einsum_exp(
+                    einsum_w[seg.start], n_l, n_r, impl=self.impl
                 )
+                s = _cst(s, ("batch", "einet_nodes", None))
+                mix_out = None
+                if spec.mix_global is not None:
+                    ln = s[:, spec.mix_child_local, :]
+                    mix_out = log_mix_exp(
+                        mixing_v[seg.start], ln, jnp.asarray(spec.mix_mask)
+                    )
+                obs.sync(s if mix_out is None else mix_out)
             if spec.is_final:
                 root_out = (
                     mix_out if spec.mix_global is not None else s[:, 0, :]

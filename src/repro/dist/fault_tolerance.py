@@ -24,8 +24,9 @@ from __future__ import annotations
 import collections
 import dataclasses
 import statistics
-import time
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro import obs
 
 
 @dataclasses.dataclass(frozen=True)
@@ -66,7 +67,7 @@ def run_training(
         step, state = mgr.restore(init)
     restarts = 0
     failures: List[str] = []
-    t_start = time.time()
+    t_start = obs.now()
     while step < num_steps:
         try:
             if fail_injector is not None:
@@ -98,7 +99,7 @@ def run_training(
         "restarts": restarts,
         "failures": failures,
         "final_step": step,
-        "wall_time_s": time.time() - t_start,
+        "wall_time_s": obs.now() - t_start,
     }
     return state, stats
 

@@ -17,11 +17,11 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-import time
 from typing import Any, Dict, Optional
 
 import numpy as np
 
+from repro import obs
 from repro.compile import REGISTRY
 from repro.core.einet import EiNet
 from repro.serve import Request, ServeEngine
@@ -158,9 +158,9 @@ def engine_log_likelihoods(
         for i in range(n)
     ]
     warmup = engine.warmup(kinds=[kind])
-    t0 = time.perf_counter()
-    results = engine.run(reqs)
-    engine_s = time.perf_counter() - t0
+    with obs.timed("eval.ll_stream", kind=kind) as t:
+        results = engine.run(reqs)
+    engine_s = t.seconds
     ll = np.array([float(results[i].value) for i in range(n)], np.float32)
     par = {"parity_rows": 0, "parity_mismatches": 0, "parity_max_abs_diff": 0.0}
     if parity_rows is None or parity_rows > 0:

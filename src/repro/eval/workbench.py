@@ -23,12 +23,12 @@ acceptance gate (must be exactly 0).
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Any, Dict, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
 
+from repro import obs
 from repro.configs import EinetConfig
 from repro.core.einet import EiNet
 from repro.data import datasets as ds_lib
@@ -179,7 +179,7 @@ def run_eval(cfg: EvalConfig, model: Optional[EiNet] = None,
         raise KeyError(
             f"unknown eval dataset {cfg.dataset!r}; one of {EVAL_DATASETS}"
         )
-    t_start = time.perf_counter()
+    t_start = obs.now()
     dataset = resolve_dataset(cfg)
     spec = dataset.spec
     train_x, _ = ds_lib.to_domain(dataset.train_x, cfg.family)
@@ -303,7 +303,7 @@ def run_eval(cfg: EvalConfig, model: Optional[EiNet] = None,
         "engine_programs": engine.num_programs,
         "engine_stats": dict(engine.stats),
         "artifacts": pngs,
-        "wall_seconds": time.perf_counter() - t_start,
+        "wall_seconds": obs.now() - t_start,
     }
     grids_lib.save_metrics_json(f"{out}/metrics.json", record)
     return record

@@ -6,12 +6,12 @@ first lines force 512 host devices -- that module is only for the dry-run
 process itself).
 """
 
-import time
 from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.compile import REGISTRY
 from repro.configs import EinetConfig
 from repro.core import EiNet, Normal, poon_domingos, random_binary_trees
@@ -78,6 +78,6 @@ def lower_einet_cell(cfg: EinetConfig, mesh, multi_pod: bool):
                 "out_shardings": (param_sh, None),
             },
         )
-        t0 = time.time()
-        lowered = jitted.lower(params_struct, batch_struct)
-        return lowered, time.time() - t0, model
+        with obs.timed("compile.lower", arch=cfg.name) as t:
+            lowered = jitted.lower(params_struct, batch_struct)
+        return lowered, t.seconds, model

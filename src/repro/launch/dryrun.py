@@ -18,13 +18,13 @@ Usage:
 
 import argparse
 import json
-import time
 import traceback
 from typing import Any, Dict, Optional
 
 import jax
 import numpy as np
 
+from repro import obs
 from repro.analysis.verify import VerifyError, verify_config, verify_einet
 from repro.configs import REGISTRY, get_config
 from repro.core import plan as plan_lib
@@ -57,9 +57,9 @@ def run_cell(arch: str, mesh_kind: str, out_dir: str,
             print(f"[verify] {arch}: {report.summary()}", flush=True)
             if not report.ok:
                 raise VerifyError(report)
-            t0 = time.time()
-            compiled = lowered.compile()
-            t_compile = time.time() - t0
+            with obs.timed("compile.cell", arch=arch) as t:
+                compiled = lowered.compile()
+            t_compile = t.seconds
         cost = compiled.cost_analysis()
         ma = compiled.memory_analysis()
         hlo = compiled.as_text()
@@ -134,7 +134,11 @@ def main():
                     help="run the static circuit/plan verifier over the "
                          "selected archs and exit (non-zero on any failed "
                          "invariant); no lowering or compilation")
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="collect obs tracing spans and export a "
+                         "Chrome-trace JSON to this path at exit")
     args = ap.parse_args()
+    obs.cli_begin(args.trace)
 
     meshes = {"single": ["single"], "multi": ["multi"],
               "both": ["single", "multi"]}[args.mesh]
@@ -148,6 +152,7 @@ def main():
         if failures:
             raise SystemExit(f"{failures} arch(s) failed verification")
         print(f"verification complete: {len(archs)} arch(s) clean")
+        obs.cli_end(args.trace)
         return
 
     failures = 0
@@ -160,6 +165,7 @@ def main():
     if failures:
         raise SystemExit(f"{failures} cells failed")
     print("dry-run complete")
+    obs.cli_end(args.trace)
 
 
 if __name__ == "__main__":

@@ -24,6 +24,7 @@ from __future__ import annotations
 
 import argparse
 
+from repro import obs
 from repro.data.datasets import DEFAULT_DATA_DIR
 from repro.eval.masks import MASK_KINDS
 from repro.eval.workbench import EVAL_DATASETS, EvalConfig, run_eval
@@ -56,7 +57,11 @@ def main(argv=None) -> dict:
     ap.add_argument("--mixture", type=int, default=0,
                     help="train/eval a mixture of this many EiNets over "
                          "k-means image clusters (§4.2); 0 = single EiNet")
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="collect obs tracing spans and export a "
+                         "Chrome-trace JSON to this path at exit")
     args = ap.parse_args(argv)
+    obs.cli_begin(args.trace)
 
     cfg = EvalConfig(
         dataset=args.dataset,
@@ -104,6 +109,7 @@ def main(argv=None) -> dict:
     print(f"artifacts: {', '.join(sorted(rec['artifacts'].values()))}")
     print(f"engine: {rec['engine_programs']} compiled programs, "
           f"parity mismatches {rec['parity_mismatches_total']}")
+    obs.cli_end(args.trace)
     if rec["parity_mismatches_total"]:
         raise SystemExit(
             f"PARITY FAILURE: {rec['parity_mismatches_total']} engine results "

@@ -14,12 +14,12 @@ from __future__ import annotations
 
 import argparse
 import os
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.checkpoint import CheckpointManager
 from repro.configs import EinetConfig, get_config
 from repro.core import plan as plan_lib
@@ -129,7 +129,11 @@ def main():
     ap.add_argument("--dist-em", action="store_true",
                     help="EiNet: use the shard_map psum-EM step over the "
                          "mesh's data axes (implied by multi-process runs)")
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="collect obs tracing spans and export a "
+                         "Chrome-trace JSON to this path at exit")
     args = ap.parse_args()
+    obs.cli_begin(args.trace)
 
     cfg = get_config(args.arch)
     mesh = make_mesh_for(model_parallel=args.model_parallel)
@@ -172,8 +176,13 @@ def main():
             step_jit = mx.make_mixture_em_step(model, mcfg)
 
             def step_fn(state, batch):
-                p, ll = step_jit(state["params"], jnp.asarray(batch["x"]))
-                state["last_ll"] = float(ll)
+                x = jnp.asarray(batch["x"])
+                with obs.timed("train.step", metric="train.step.seconds"):
+                    p, ll = step_jit(state["params"], x)
+                    state["last_ll"] = float(ll)
+                obs.METRICS.counter("train.examples.count").inc(
+                    int(x.shape[0]))
+                obs.METRICS.gauge("train.ll.last").set(state["last_ll"])
                 return {"params": p, "step": state["step"] + 1,
                         "last_ll": state["last_ll"]}
 
@@ -224,25 +233,31 @@ def main():
                 to_device = jnp.asarray
 
             def step_fn(state, batch):
-                p, ll = step_jit(state["params"], to_device(batch["x"]))
-                state["last_ll"] = float(ll)
+                x = to_device(batch["x"])
+                with obs.timed("train.step", metric="train.step.seconds"):
+                    p, ll = step_jit(state["params"], x)
+                    state["last_ll"] = float(ll)
+                obs.METRICS.counter("train.examples.count").inc(
+                    int(np.asarray(batch["x"]).shape[0]))
+                obs.METRICS.gauge("train.ll.last").set(state["last_ll"])
                 return {"params": p, "step": state["step"] + 1,
                         "last_ll": state["last_ll"]}
 
             init_state = {"params": params, "step": jnp.zeros((), jnp.int32),
                           "last_ll": 0.0}
 
-        t0 = time.time()
         lls = []
-        state, stats = ft.run_training(
-            step_fn, init_state, loader.batch_at, mgr, args.steps,
-            ft.LoopConfig(checkpoint_every=args.checkpoint_every),
-            on_step=lambda s, st: lls.append(st["last_ll"]),
-        )
-    dt = time.time() - t0
+        with obs.timed("train.run") as t_run:
+            state, stats = ft.run_training(
+                step_fn, init_state, loader.batch_at, mgr, args.steps,
+                ft.LoopConfig(checkpoint_every=args.checkpoint_every),
+                on_step=lambda s, st: lls.append(st["last_ll"]),
+            )
+    dt = t_run.seconds
     print(f"{args.arch}: {args.steps} steps, {dt/max(args.steps,1)*1e3:.0f} "
           f"ms/step, dp_shards={dp_shards(mesh)}, restarts={stats['restarts']}")
     print(f"objective: first {np.mean(lls[:5]):.3f} -> last {np.mean(lls[-5:]):.3f}")
+    obs.cli_end(args.trace)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,147 @@
+"""``repro.obs``: zero-dependency tracing + metrics for every hot path.
+
+Three parts (see the submodule docstrings):
+
+  * :mod:`repro.obs.trace`   -- nestable ``span(...)`` context managers,
+    Chrome/Perfetto ``trace_event`` export, the ``REPRO_TRACE`` switch;
+  * :mod:`repro.obs.metrics` -- counters / gauges / log-bucket histograms
+    with ``percentile(q)``, snapshot-able to plain JSON;
+  * :mod:`repro.obs.events`  -- the shared compile-event hook fed by
+    ``repro.compile.ProgramRegistry`` (single source of truth for compile
+    counts; ``analysis.sentry`` subscribes here).
+
+Instrumented subsystems tag spans/metrics as ``subsystem.verb.unit``:
+``serve.request.seconds{kind,bucket}``, ``compile.cache.misses{kind}``,
+``plan.segment`` (trace-time, per execution-plan segment), ``train.step.
+seconds``, ``eval.inpaint.seconds{mask}``.  The launch CLIs accept
+``--trace out.json`` and print one ``[obs]`` summary line at exit
+(:func:`format_summary`).
+
+Import discipline: stdlib only.  Everything in ``repro`` (including
+``repro.compile`` before jax loads) may import ``repro.obs`` freely.
+"""
+
+from repro.obs.events import (
+    cache_event,
+    compile_event,
+    on_compile,
+    remove_compile_listener,
+)
+from repro.obs.metrics import (
+    METRICS,
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    percentile_from_counts,
+)
+from repro.obs.trace import (
+    Span,
+    Timed,
+    configure,
+    enabled,
+    event,
+    export_trace,
+    now,
+    num_events,
+    reset,
+    set_sync,
+    span,
+    sync,
+    timed,
+    trace_events,
+)
+
+__all__ = [
+    "METRICS", "Counter", "Gauge", "Histogram", "MetricsRegistry",
+    "Span", "Timed", "cache_event", "compile_event", "configure",
+    "enabled", "event", "export_trace", "format_summary", "now",
+    "num_events", "on_compile", "percentile_from_counts",
+    "remove_compile_listener", "reset", "set_sync", "span", "summary",
+    "sync", "timed", "trace_events",
+]
+
+
+def summary() -> dict:
+    """Compact cross-subsystem rollup of the metrics registry (the data
+    behind the ``[obs]`` exit line)."""
+    out: dict = {}
+    compiles = sum(
+        m.value for _, m in METRICS.find("compile.cache.misses")
+    )
+    if compiles:
+        out["compiles"] = int(compiles)
+        out["compile_seconds"] = round(sum(
+            m.value for _, m in METRICS.find("compile.programs.seconds")
+        ), 3)
+        hits = sum(m.value for _, m in METRICS.find("compile.cache.hits"))
+        out["cache_hits"] = int(hits)
+    req = METRICS.sum_histogram("serve.request.seconds")
+    n_req = sum(req)
+    if n_req:
+        out["serve_requests"] = n_req
+        out["serve_latency_ms"] = {
+            f"p{q}": round(percentile_from_counts(req, q) * 1e3, 3)
+            for q in (50, 95, 99)
+        }
+    steps = METRICS.sum_histogram("train.step.seconds")
+    n_steps = sum(steps)
+    if n_steps:
+        out["train_steps"] = n_steps
+        out["train_step_ms_p50"] = round(
+            percentile_from_counts(steps, 50) * 1e3, 1)
+        ex = METRICS.value("train.examples.count")
+        if ex:
+            out["train_examples"] = int(ex)
+    seg = [(d.get("kind"), int(m.value))
+           for d, m in METRICS.find("plan.segment.traces")]
+    if seg:
+        out["plan_segment_traces"] = dict(sorted(seg))
+    if num_events():
+        out["trace_events"] = num_events()
+    return out
+
+
+def format_summary() -> str:
+    """The ``[obs]`` exit line: human-readable one-liner of :func:`summary`."""
+    s = summary()
+    parts = []
+    if "compiles" in s:
+        parts.append(
+            f"compile: {s['compiles']} programs "
+            f"({s['compile_seconds']:.2f} s, {s['cache_hits']} cache hits)"
+        )
+    if "serve_requests" in s:
+        lm = s["serve_latency_ms"]
+        parts.append(
+            f"serve: {s['serve_requests']} req, p50 {lm['p50']:.2f} ms, "
+            f"p95 {lm['p95']:.2f} ms, p99 {lm['p99']:.2f} ms"
+        )
+    if "train_steps" in s:
+        ex = f", {s['train_examples']} examples" if "train_examples" in s \
+            else ""
+        parts.append(
+            f"train: {s['train_steps']} steps, "
+            f"p50 {s['train_step_ms_p50']:.0f} ms/step{ex}"
+        )
+    if "plan_segment_traces" in s:
+        seg = ", ".join(f"{k}={v}" for k, v in
+                        s["plan_segment_traces"].items())
+        parts.append(f"plan traces: {seg}")
+    if "trace_events" in s:
+        parts.append(f"trace: {s['trace_events']} events")
+    return " | ".join(parts) if parts else "no activity recorded"
+
+
+def cli_begin(trace_path=None) -> None:
+    """Launch-CLI prologue: ``--trace out.json`` enables collection."""
+    if trace_path:
+        configure(trace=True)
+
+
+def cli_end(trace_path=None) -> None:
+    """Launch-CLI epilogue: print the ``[obs]`` line; export the trace."""
+    print(f"[obs] {format_summary()}")
+    if trace_path:
+        path = export_trace(trace_path)
+        print(f"[obs] trace: {num_events()} events -> {path}")

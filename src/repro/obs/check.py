@@ -1,0 +1,103 @@
+"""Chrome-trace schema checker: the CI gate behind the trace-smoke step.
+
+Validates that an exported trace is structurally a Chrome ``trace_event``
+JSON document -- loads through ``json.loads``, ``traceEvents`` is a list,
+every event carries ``ph``/``ts``/``name``/``args`` (and ``dur`` for
+complete events) with sane types -- and optionally that spans from required
+subsystems are present (``--require serve.`` asserts at least one event
+whose name starts with that prefix).
+
+  PYTHONPATH=src python -m repro.obs.check /tmp/trace.json \
+      --require serve. --require plan. --require compile.
+
+Exit status 0 = valid, 1 = problems (each printed).  stdlib-only, like the
+rest of ``repro.obs``.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+from typing import Any, Dict, List, Sequence
+
+_REQUIRED_FIELDS = ("ph", "ts", "name", "args")
+
+
+def validate_events(doc: Any,
+                    require_prefixes: Sequence[str] = ()) -> List[str]:
+    """Problems found in a parsed trace document (empty list = valid)."""
+    problems: List[str] = []
+    if not isinstance(doc, dict) or "traceEvents" not in doc:
+        return ["document is not an object with a 'traceEvents' key"]
+    events = doc["traceEvents"]
+    if not isinstance(events, list):
+        return ["'traceEvents' is not a list"]
+    if not events:
+        problems.append("trace contains no events")
+    for i, ev in enumerate(events):
+        if not isinstance(ev, dict):
+            problems.append(f"event {i} is not an object")
+            continue
+        missing = [f for f in _REQUIRED_FIELDS if f not in ev]
+        if missing:
+            problems.append(f"event {i} ({ev.get('name')!r}) missing "
+                            f"field(s) {missing}")
+            continue
+        if not isinstance(ev["name"], str) or not ev["name"]:
+            problems.append(f"event {i}: 'name' must be a non-empty string")
+        if not isinstance(ev["ts"], (int, float)) or ev["ts"] < 0:
+            problems.append(f"event {i} ({ev['name']!r}): bad ts {ev['ts']!r}")
+        if not isinstance(ev["args"], dict):
+            problems.append(f"event {i} ({ev['name']!r}): 'args' must be "
+                            f"an object")
+        if ev["ph"] == "X":
+            dur = ev.get("dur")
+            if not isinstance(dur, (int, float)) or dur < 0:
+                problems.append(
+                    f"event {i} ({ev['name']!r}): complete event needs a "
+                    f"non-negative 'dur', got {dur!r}")
+    names = [ev.get("name", "") for ev in events if isinstance(ev, dict)]
+    for prefix in require_prefixes:
+        if not any(isinstance(n, str) and n.startswith(prefix)
+                   for n in names):
+            problems.append(
+                f"no span from required subsystem {prefix!r} "
+                f"(have: {sorted(set(names))[:12]})")
+    return problems
+
+
+def validate_trace(path: str,
+                   require_prefixes: Sequence[str] = ()) -> List[str]:
+    """Load + validate one exported trace file."""
+    try:
+        with open(path) as f:
+            doc: Dict[str, Any] = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"cannot load {path}: {e}"]
+    return validate_events(doc, require_prefixes)
+
+
+def main(argv=None) -> int:
+    import argparse
+
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.obs.check", description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("path", help="exported Chrome-trace JSON file")
+    ap.add_argument("--require", action="append", default=[],
+                    metavar="PREFIX",
+                    help="assert at least one event name starts with this "
+                         "prefix (repeatable)")
+    args = ap.parse_args(argv)
+    problems = validate_trace(args.path, args.require)
+    for p in problems:
+        print(f"trace check: {p}")
+    if not problems:
+        with open(args.path) as f:
+            n = len(json.load(f)["traceEvents"])
+        print(f"trace check: {args.path} valid ({n} events)")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

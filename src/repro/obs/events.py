@@ -1,0 +1,60 @@
+"""The shared compile-event hook: ONE source of truth for compile counts.
+
+``repro.compile.ProgramRegistry`` is the only place programs get compiled,
+so it is the only emitter: cache hits call :func:`cache_event`, cache
+misses call :func:`compile_event` (which counts the miss, accumulates
+compile seconds, and fans the event out to subscribers).  Consumers --
+``analysis.sentry.CompileSentry`` (per-scope attribution), the ``[obs]``
+exit summary, and the BENCH JSONs -- all read these counters or subscribe
+to the stream; nobody else increments them, so nothing double counts.
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Any, Callable, Dict, List
+
+from repro.obs.metrics import METRICS
+
+CompileListener = Callable[[Dict[str, Any]], None]
+
+_LOCK = threading.Lock()
+_LISTENERS: List[CompileListener] = []
+
+
+def on_compile(listener: CompileListener) -> CompileListener:
+    """Subscribe to compile events; returns ``listener`` (the unsubscribe
+    token for :func:`remove_compile_listener`)."""
+    with _LOCK:
+        if listener not in _LISTENERS:
+            _LISTENERS.append(listener)
+    return listener
+
+
+def remove_compile_listener(listener: CompileListener) -> None:
+    with _LOCK:
+        if listener in _LISTENERS:
+            _LISTENERS.remove(listener)
+
+
+def cache_event(kind: str, hit: bool) -> None:
+    """One program-cache lookup in the registry: ``kind`` is the cache path
+    ("aot" | "jit").  Misses are counted by :func:`compile_event` (a miss IS
+    a compile), so this only counts hits."""
+    if hit:
+        METRICS.counter("compile.cache.hits", kind=kind).inc()
+
+
+def compile_event(kind: str, key: Any, seconds: float) -> None:
+    """One compile (= cache miss) in the registry.  ``seconds`` is the
+    measured compile wall-clock (0.0 for the lazy ``jit`` path, which
+    compiles on first call inside jax)."""
+    METRICS.counter("compile.cache.misses", kind=kind).inc()
+    METRICS.counter("compile.programs.seconds", kind=kind).inc(seconds)
+    with _LOCK:
+        listeners = list(_LISTENERS)
+    if not listeners:
+        return
+    ev = {"kind": kind, "key": repr(key), "seconds": seconds}
+    for fn in listeners:
+        fn(ev)

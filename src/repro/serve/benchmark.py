@@ -7,6 +7,11 @@ One routine, shared by ``repro.launch.serve --arch einet_*`` and
   * warm-up (program compilation) is timed separately from steady state --
     compile cost is paid once per (kind, bucket), never per request;
   * steady state reruns the identical stream against the warm program cache;
+  * latency is PER REQUEST, enqueue -> complete, read from the engine's
+    ``serve.request.seconds`` histograms (the whole-stream wall clock hid
+    the per-kind distribution -- a slow sampling request was invisible
+    behind 63 fast LLs): steady-state-only percentiles come from marking
+    the histogram counts before the timed passes and diffing after;
   * two baselines, both one-call-at-a-time: ``legacy_call`` is per-request
     serving with the pre-engine sampling bug intact (jitted LLs, *unjitted*
     sampling -- serve.py:80), the "current path" the >= 5x bar refers to;
@@ -18,13 +23,29 @@ One routine, shared by ``repro.launch.serve --arch einet_*`` and
 
 from __future__ import annotations
 
-import time
-from typing import Any, Dict, Optional, Sequence
+from typing import Any, Dict, List, Optional, Sequence
 
 import numpy as np
 
+from repro import obs
+from repro.obs import METRICS, percentile_from_counts
 from repro.serve.engine import Request, ServeEngine
 from repro.serve.workload import direct_call, legacy_call
+
+
+def _program_cache_counts() -> Dict[str, int]:
+    """Process-wide program-cache counters (diff two snapshots to scope
+    them to one benchmark): engine-dict fast-path hits/misses plus the
+    shared registry's AOT compile count (a registry miss IS a compile)."""
+    return {
+        "hits": int(sum(
+            m.value for _, m in METRICS.find("serve.program_cache.hits"))),
+        "misses": int(sum(
+            m.value for _, m in METRICS.find("serve.program_cache.misses"))),
+        "registry_compiles": int(sum(
+            m.value
+            for _, m in METRICS.find("compile.cache.misses", kind="aot"))),
+    }
 
 
 def run_benchmark(
@@ -43,32 +64,46 @@ def run_benchmark(
     reps = max(1, int(reps))
     max_batch = max_batch or max(1, min(32, n))
     engine = ServeEngine(model, params, max_batch=max_batch, rules=rules)
+    kinds = sorted({r.kind for r in requests})
+    cache0 = _program_cache_counts()
 
     # -- warm-up pass: compiles the program cache on demand
-    t0 = time.perf_counter()
-    results = engine.run(requests)
-    t_warm = time.perf_counter() - t0
+    with obs.timed("serve.bench.warmup") as t_warm:
+        results = engine.run(requests)
 
     warm_steps = engine.stats["steps"]
     warm_padded = engine.stats["padded_rows"]
 
-    # -- steady state: identical stream, warm cache
-    t0 = time.perf_counter()
-    for _ in range(reps):
-        results = engine.run(requests)
-    t_steady = (time.perf_counter() - t0) / reps
+    # -- steady state: identical stream, warm cache.  Mark the per-request
+    # latency histograms here so the percentiles below cover ONLY the timed
+    # passes (warm-up latencies include compiles; they must not pollute)
+    marks: Dict[str, List[int]] = {
+        k: METRICS.sum_histogram("serve.request.seconds", kind=k)
+        for k in kinds
+    }
+    with obs.timed("serve.bench.steady", reps=reps) as t_st:
+        for _ in range(reps):
+            results = engine.run(requests)
+    t_steady = t_st.seconds / reps
+    latency_ms: Dict[str, Dict[str, float]] = {}
+    for k in kinds:
+        after = METRICS.sum_histogram("serve.request.seconds", kind=k)
+        delta = [a - b for a, b in zip(after, marks[k])]
+        latency_ms[k] = {
+            f"p{q}": round(percentile_from_counts(delta, q) * 1e3, 4)
+            for q in (50, 95, 99)
+        }
     # per-stream scheduling stats (engine.stats accumulate across passes)
     steps_per_pass = (engine.stats["steps"] - warm_steps) // reps
     padded_per_pass = (engine.stats["padded_rows"] - warm_padded) // reps
+    cache1 = _program_cache_counts()
 
     # -- strong baseline: fully-jitted one-call-at-a-time (warmed the same way)
     call = direct_call(model, params)
-    t0 = time.perf_counter()
-    direct = {r.req_id: np.asarray(call(r)) for r in requests}
-    t_direct_warm = time.perf_counter() - t0
-    t0 = time.perf_counter()
-    direct = {r.req_id: np.asarray(call(r)) for r in requests}
-    t_direct = time.perf_counter() - t0
+    with obs.timed("serve.bench.direct_warmup") as t_dw:
+        direct = {r.req_id: np.asarray(call(r)) for r in requests}
+    with obs.timed("serve.bench.direct") as t_d:
+        direct = {r.req_id: np.asarray(call(r)) for r in requests}
 
     # -- acceptance baseline: the pre-engine path (unjitted sampling).
     # One warm pass primes the jitted LL programs + eager op caches so the
@@ -76,10 +111,10 @@ def run_benchmark(
     legacy = legacy_call(model, params)
     for r in requests:
         np.asarray(legacy(r))
-    t0 = time.perf_counter()
-    for r in requests:
-        np.asarray(legacy(r))
-    t_legacy = time.perf_counter() - t0
+    with obs.timed("serve.bench.legacy") as t_l:
+        for r in requests:
+            np.asarray(legacy(r))
+    t_legacy = t_l.seconds
 
     parity = max(
         float(np.max(np.abs(np.asarray(results[i].value) - direct[i])))
@@ -87,21 +122,23 @@ def run_benchmark(
     )
     return {
         "num_requests": n,
-        "kinds": sorted({r.kind for r in requests}),
+        "kinds": kinds,
         "max_batch": max_batch,
         "buckets": list(engine.buckets),
         "reps": reps,
-        "warmup_s": t_warm,
+        "warmup_s": t_warm.seconds,
         "compile_s": engine.stats["compile_s"],
-        "direct_warmup_s": t_direct_warm,
+        "direct_warmup_s": t_dw.seconds,
         "steady_s": t_steady,
         "engine_qps": n / t_steady,
-        "direct_s": t_direct,
-        "direct_qps": n / t_direct,
+        "latency_ms": latency_ms,
+        "program_cache": {k: cache1[k] - cache0[k] for k in cache1},
+        "direct_s": t_d.seconds,
+        "direct_qps": n / t_d.seconds,
         "legacy_s": t_legacy,
         "legacy_qps": n / t_legacy,
         "speedup": t_legacy / t_steady,
-        "speedup_vs_jitted": t_direct / t_steady,
+        "speedup_vs_jitted": t_d.seconds / t_steady,
         "programs": engine.num_programs,
         "compiles": engine.stats["compiles"],
         "scheduler_steps": steps_per_pass,
@@ -119,6 +156,19 @@ def format_report(r: Dict[str, Any]) -> str:
         f"direct path {r['direct_warmup_s']*1e3:.0f} ms",
         f"steady    : engine {r['steady_s']*1e3:.1f} ms "
         f"({r['engine_qps']:.0f} req/s)",
+    ]
+    for kind, lm in sorted(r.get("latency_ms", {}).items()):
+        lines.append(
+            f"latency   : {kind:<24s} p50 {lm['p50']:8.3f} ms   "
+            f"p95 {lm['p95']:8.3f} ms   p99 {lm['p99']:8.3f} ms"
+        )
+    pc = r.get("program_cache")
+    if pc:
+        lines.append(
+            f"prog cache: {pc['hits']} hits / {pc['misses']} misses "
+            f"({pc['registry_compiles']} registry compiles)"
+        )
+    lines += [
         f"baselines : current one-call-at-a-time (unjitted sampling) "
         f"{r['legacy_s']*1e3:.1f} ms ({r['legacy_qps']:.0f} req/s) -> "
         f"{r['speedup']:.1f}x; fully-jitted per-request "

@@ -29,7 +29,6 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-import time
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -37,6 +36,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import compile as compile_lib
+from repro import obs
+from repro.obs import METRICS
 from repro.core.einet import QUERY_KINDS, EiNet
 from repro.dist import sharding as shlib
 from repro.serve.queue import RequestQueue, SlotManager
@@ -148,6 +149,9 @@ class ServeEngine:
             "requests": 0,
             "padded_rows": 0,
         }
+        # req_id -> enqueue wall clock, for per-request queue-wait and
+        # end-to-end latency metrics (popped in _execute)
+        self._submit_t: Dict[int, float] = {}
 
     # ----------------------------------------------------------- submission
     def submit(self, request: Request) -> None:
@@ -170,6 +174,8 @@ class ServeEngine:
                 f"(got {request.component!r})"
             )
         self.queue.submit(request)
+        self._submit_t[request.req_id] = obs.now()
+        METRICS.gauge("serve.queue.depth").set(len(self.queue))
 
     def submit_many(self, requests: Sequence[Request]) -> None:
         for r in requests:
@@ -200,7 +206,11 @@ class ServeEngine:
         key = (kind, bucket) if component is None else (kind, bucket, component)
         prog = self._programs.get(key)
         if prog is not None:
+            # engine-local fast path; misses fall through to the shared
+            # registry, which does its own (compile.cache.*) accounting
+            METRICS.counter("serve.program_cache.hits", kind=kind).inc()
             return prog
+        METRICS.counter("serve.program_cache.misses", kind=kind).inc()
         d = self.model.num_vars
         batch_struct = {
             "x": jax.ShapeDtypeStruct((bucket, d), jnp.float32),
@@ -242,20 +252,20 @@ class ServeEngine:
         reported separately from steady-state latency).  Component-pinned
         kinds warm one program per component (all of them by default; pass
         ``components`` to narrow)."""
-        t0 = time.perf_counter()
-        for kind in kinds or self.query_kinds:
-            if kind in self.component_kinds:
-                comps: Sequence[Optional[int]] = (
-                    components
-                    if components is not None
-                    else range(getattr(self.model, "num_components", 0))
-                )
-            else:
-                comps = (None,)
-            for c in comps:
-                for bucket in buckets or self.buckets:
-                    self._program(kind, bucket, c)
-        return time.perf_counter() - t0
+        with obs.timed("serve.warmup") as t:
+            for kind in kinds or self.query_kinds:
+                if kind in self.component_kinds:
+                    comps: Sequence[Optional[int]] = (
+                        components
+                        if components is not None
+                        else range(getattr(self.model, "num_components", 0))
+                    )
+                else:
+                    comps = (None,)
+                for c in comps:
+                    for bucket in buckets or self.buckets:
+                        self._program(kind, bucket, c)
+        return t.seconds
 
     # ------------------------------------------------------------ execution
     def _assemble(self, kind: str, reqs: List[Request], bucket: int):
@@ -278,12 +288,32 @@ class ServeEngine:
         self, kind: str, component: Optional[int], reqs: List[Request]
     ) -> List[Result]:
         bucket = self._bucket_for(len(reqs))
-        batch = self._assemble(kind, reqs, bucket)
-        prog = self._program(kind, bucket, component)
-        out = np.asarray(prog(self.params, batch))[: len(reqs)]
+        t_pop = obs.now()
+        wait_hist = METRICS.histogram("serve.queue_wait.seconds", kind=kind)
+        for r in reqs:
+            t_sub = self._submit_t.get(r.req_id)
+            if t_sub is not None:
+                wait_hist.record(t_pop - t_sub)
+        with obs.timed("serve.coalesce", metric="serve.coalesce.seconds",
+                       kind=kind, bucket=bucket):
+            batch = self._assemble(kind, reqs, bucket)
+        with obs.timed("serve.execute", metric="serve.execute.seconds",
+                       kind=kind, bucket=bucket):
+            prog = self._program(kind, bucket, component)
+            out = np.asarray(prog(self.params, batch))[: len(reqs)]
         self.stats["padded_rows"] += bucket - len(reqs)
         self.stats["requests"] += len(reqs)
-        return [Result(r.req_id, kind, out[i]) for i, r in enumerate(reqs)]
+        t_done = obs.now()
+        req_hist = METRICS.histogram(
+            "serve.request.seconds", kind=kind, bucket=bucket
+        )
+        results = []
+        for i, r in enumerate(reqs):
+            t_sub = self._submit_t.pop(r.req_id, None)
+            if t_sub is not None:
+                req_hist.record(t_done - t_sub)
+            results.append(Result(r.req_id, kind, out[i]))
+        return results
 
     def step(self) -> List[Result]:
         """One scheduling step: serve the oldest pending request's coalescing
@@ -298,11 +328,13 @@ class ServeEngine:
         if limit == 0:
             return []
         reqs = self.queue.pop_kind(group, limit)
+        METRICS.gauge("serve.queue.depth").set(len(self.queue))
         # limit <= slots.free, so every acquire succeeds; the leases bound
         # in-flight rows for drivers that overlap steps (async serving)
         leases = [self.slots.acquire() for _ in reqs]
         try:
-            results = self._execute(kind, component, reqs)
+            with obs.span("serve.step", kind=kind, n=len(reqs)):
+                results = self._execute(kind, component, reqs)
         finally:
             for s in leases:
                 if s is not None:

@@ -33,6 +33,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import compile as compile_lib
+from repro import obs
 from repro.core.einet import EiNet
 from repro.core.em import (
     EMConfig,
@@ -322,8 +323,14 @@ def fit(
         if num_steps is not None and i >= num_steps:
             break
         x = batch["x"] if isinstance(batch, dict) else batch
-        params, ll = step_fn(params, jnp.asarray(x))
-        lls.append(float(ll))
+        x = jnp.asarray(x)
+        # float(ll) blocks on the device, so the timed region covers the
+        # full step (dispatch + compute), not just dispatch
+        with obs.timed("train.step", metric="train.step.seconds"):
+            params, ll = step_fn(params, x)
+            lls.append(float(ll))
+        obs.METRICS.counter("train.examples.count").inc(int(x.shape[0]))
+        obs.METRICS.gauge("train.ll.last").set(lls[-1])
         if on_step is not None:
             on_step(i, lls[-1])
     return params, lls

@@ -108,6 +108,24 @@ def test_donated_read_in_loop_without_rebinding_caught():
     assert "donated-read" in rules_of(lint(bad))
 
 
+def test_timing_outside_obs_caught():
+    # raw clock reads are obs's job (obs.now / obs.timed)
+    bad = "import time\nt0 = time.perf_counter()\n"
+    assert rules_of(lint(bad)) == {"timing-outside-obs"}
+    assert rules_of(lint("import time\nt = time.time()\n")) == \
+        {"timing-outside-obs"}
+    assert rules_of(lint("from time import perf_counter\n")) == \
+        {"timing-outside-obs"}
+    assert rules_of(lint("import time\nt = time.monotonic_ns()\n")) == \
+        {"timing-outside-obs"}
+    # the obs package itself and standalone benchmark drivers are the allow
+    assert lint(bad, "src/repro/obs/trace.py") == []
+    assert lint(bad, "benchmarks/bench_serve.py") == []
+    # non-clock uses of the time module are not timing
+    assert lint("import time\ntime.sleep(0.1)\n") == []
+    assert lint("from time import sleep\n") == []
+
+
 @pytest.mark.parametrize("rule", sorted(RULES))
 def test_every_rule_has_a_negative(rule):
     """Each rule id above is exercised by a seeded-violation test; pin the
@@ -123,6 +141,7 @@ def test_every_rule_has_a_negative(rule):
             "    s(p, x)\n"
             "    print(p)\n"
         ),
+        "timing-outside-obs": "import time\nt = time.perf_counter()\n",
     }
     assert rule in seeded
     assert rule in rules_of(lint(seeded[rule]))
