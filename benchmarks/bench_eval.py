@@ -25,6 +25,7 @@ from repro.eval.inpainting import run_inpainting
 from repro.eval.metrics import direct_log_likelihoods, engine_log_likelihoods
 from repro.eval.workbench import EvalConfig, pd_config_for
 from repro.launch.cells import build_einet
+from repro.obs import slo as slo_lib
 from repro.serve import ServeEngine
 
 
@@ -92,6 +93,7 @@ def main(smoke: bool = False, rows: int = 512, inpaint_rows: int = 8,
         with open(out, "w") as f:
             json.dump(report, f, indent=2, sort_keys=True)
         print(f"wrote {out}")
+        print(f"history -> {slo_lib.append_history('eval', report)}")
     return report if mismatches == 0 else {}
 
 

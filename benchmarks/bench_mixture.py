@@ -30,6 +30,7 @@ import numpy as np
 from repro.configs import EinetConfig
 from repro.launch.cells import build_einet
 from repro.mixture import EiNetMixture, MixtureTrainConfig, make_mixture_em_step
+from repro.obs import slo as slo_lib
 from repro.train import TrainConfig, make_em_step
 
 # one CPU-feasible component in the dispatch-bound regime the mixture step
@@ -187,6 +188,7 @@ def main(smoke: bool = False, components: int = 0, batch: int = 0,
         with open(out, "w") as f:
             json.dump(report, f, indent=2, sort_keys=True)
         print(f"wrote {out}")
+        print(f"history -> {slo_lib.append_history('mixture', report)}")
     return report if parity_ok else {}
 
 

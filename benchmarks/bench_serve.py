@@ -21,6 +21,7 @@ import jax
 
 from repro.configs import EinetConfig, get_config
 from repro.launch.cells import build_einet
+from repro.obs import slo as slo_lib
 from repro.serve import format_report, mixed_requests, run_benchmark
 
 SMOKE_CONFIG = EinetConfig(
@@ -113,6 +114,7 @@ def main(
         with open(out, "w") as f:
             json.dump(report, f, indent=2, sort_keys=True)
         print(f"wrote {out}")
+        print(f"history -> {slo_lib.append_history('serve', report)}")
     return report if ok else {}
 
 

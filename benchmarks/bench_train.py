@@ -43,6 +43,7 @@ from repro.core.em import (
 from repro.kernels import ops
 from repro.kernels.ref import log_einsum_exp_ref
 from repro.launch.cells import build_einet
+from repro.obs import slo as slo_lib
 from repro.train import TrainConfig, make_em_step
 
 SMOKE_CONFIG = EinetConfig(
@@ -412,6 +413,7 @@ def main(smoke: bool = False, archs=None, batch: int = 0, steps: int = 0,
         with open(out, "w") as f:
             json.dump(report, f, indent=2, sort_keys=True)
         print(f"wrote {out}")
+        print(f"history -> {slo_lib.append_history('train', report)}")
     return report if (parity_ok and speedup_ok and grouped_ok) else {}
 
 

@@ -220,6 +220,88 @@ def eval_summary(root: str = "artifacts/eval") -> str:
     return "\n\n".join(parts)
 
 
+def health_summary(root: str = "artifacts/health") -> str:
+    """One row per arch from the dry-run numerical-health probe
+    (``repro.launch.dryrun --verify`` writes ``artifacts/health/*.json``)."""
+    if not os.path.isdir(root):
+        return ("_no health probe records on this host — run "
+                "`PYTHONPATH=src python -m repro.launch.dryrun --verify` "
+                "first._")
+    rows = ["| arch | params | probe LL mean | LL min | non-finite | "
+            "leaf sat | segment sat (max) |",
+            "|" + "---|" * 7]
+    for f in sorted(os.listdir(root)):
+        if not f.endswith(".json"):
+            continue
+        rec = json.load(open(os.path.join(root, f)))
+        if rec.get("skipped"):
+            reason = rec.get("reason", "?")
+            rows.append(f"| {rec.get('arch')} | — | — | — | — | — | "
+                        f"skipped: {reason} |")
+            continue
+        seg = rec.get("segment_sat_frac") or [0.0]
+        rows.append(
+            f"| {rec['arch']} | {rec.get('num_params', 0):,} | "
+            f"{rec['ll_mean']:.2f} | {rec['ll_min']:.2f} | "
+            f"{rec['ll_nonfinite']} | {rec['leaf_sat_frac']:.3f} | "
+            f"{max(seg):.3f} over {len(seg)} segment(s) |"
+        )
+    return "\n".join(rows)
+
+
+def bench_history_summary(root: str = "artifacts/bench_history",
+                          last: int = 5) -> str:
+    """Recent commit-stamped rows per bench kind from the JSONL history
+    (``repro.obs.slo.append_history``; read directly so this generator
+    stays import-free)."""
+    if not os.path.isdir(root):
+        return ("_no bench history on this host — any "
+                "`python -m benchmarks.bench_*` run appends to it._")
+    parts = []
+    for fname in sorted(os.listdir(root)):
+        if not fname.endswith(".jsonl"):
+            continue
+        rows = []
+        with open(os.path.join(root, fname)) as f:
+            for line in f:
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    rows.append(json.loads(line))
+                except json.JSONDecodeError:
+                    continue
+        if not rows:
+            continue
+        kind = fname[: -len(".jsonl")]
+        md = [f"**{kind}** ({len(rows)} run(s) recorded):", "",
+              "| commit | when (UTC) | profile | headline |",
+              "|" + "---|" * 4]
+        for r in rows[-last:]:
+            if kind == "serve":
+                head = (f"x{r.get('speedup_vs_jitted', 0):.2f} vs jitted, "
+                        f"{r.get('engine_qps', 0):.0f} req/s")
+            elif kind == "train":
+                cells = r.get("cells") or {}
+                head = ", ".join(
+                    f"{a}: {c.get('fused_ms') or 0:.1f} ms"
+                    for a, c in sorted(cells.items())) or "—"
+            elif kind == "mixture":
+                cells = r.get("cells") or {}
+                head = ", ".join(f"{c}: x{s:.2f}"
+                                 for c, s in sorted(cells.items())) or "—"
+            else:
+                head = f"engine/direct x{r.get('engine_vs_direct') or 0:.2f}"
+            md.append(
+                f"| {r.get('commit', '?')} | "
+                f"{str(r.get('ts', '?'))[:16]} | "
+                f"{'smoke' if r.get('smoke') else 'full'} | {head} |")
+        parts.append("\n".join(md))
+    return "\n\n".join(parts) if parts else (
+        "_no bench history on this host — any "
+        "`python -m benchmarks.bench_*` run appends to it._")
+
+
 def verify_summary() -> str:
     """Verifier-coverage row per registered arch.  Needs jax (the circuit
     is built to be verified); degrades to a placeholder without it."""
@@ -264,7 +346,9 @@ def main():
     out = out.replace("{{DRYRUN_MULTI}}", multi)
     out = out.replace("{{ROOFLINE_BASELINE}}", base)
     out = out.replace("{{ROOFLINE_OPT}}", opt)
+    out = out.replace("{{HEALTH}}", health_summary())
     out = out.replace("{{BENCHES}}", bench_summary())
+    out = out.replace("{{BENCH_HISTORY}}", bench_history_summary())
     out = out.replace("{{EVAL}}", eval_summary())
     out = out.replace("{{PERF_LOG}}", perf)
     with open("EXPERIMENTS.md", "w") as f:

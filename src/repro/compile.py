@@ -139,6 +139,9 @@ class ProgramRegistry:
         )
         self.stats["compiles"] += 1
         obs.compile_event("jit", key, 0.0)
+        # the lazy jit path has no compile wall-clock to span; an instant
+        # marker keeps "compile." visible in traces of train-only runs
+        obs.event("compile.jit", key=repr(key))
         table[key] = jitted
         return jitted
 

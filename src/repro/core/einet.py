@@ -41,6 +41,7 @@ from repro.core.layers import (
     normalize_einsum_weights,
     normalize_mixing_weights,
 )
+from repro.obs import health as health_lib
 
 # execution planning lives in core.plan; re-exported here for callers (and
 # tests) that reach the planner types through the model module
@@ -124,6 +125,7 @@ class EiNet:
         grouped: bool = True,
         vmem_budget: Optional[int] = None,
         verify: Optional[str] = None,
+        health: Optional[bool] = None,
     ):
         self.graph = graph
         self.K = int(num_sums)
@@ -139,6 +141,10 @@ class EiNet:
             vmem_budget=self.vmem_budget,
         )
         self.exec_plan = self.plan.segments
+        # numerical-health telemetry (repro.obs.health): ctor knob wins, else
+        # the REPRO_HEALTH env var; the spec is fixed by the execution plan
+        self.health = health_lib.resolve_health(health)
+        self.health_spec = health_lib.spec_for(self)
         # static verification (repro.analysis.verify): the ctor knob wins,
         # else the REPRO_VERIFY env var ("off" | "report" | "raise")
         self.verify_report = None
@@ -419,6 +425,7 @@ class EiNet:
                 n_r = buffer[:, spec.right, :]
             s = log_einsum_exp(einsum_w[i], n_l, n_r, impl=self.impl)  # (B,L,k)
             s = _cst(s, ("batch", "einet_nodes", None))
+            health_lib.tap_segment(s)
             new_rows = [s]
             mix_out = None
             if spec.mix_global is not None:
@@ -490,6 +497,7 @@ class EiNet:
                         impl=self.impl,
                     )
                 s = _cst(s, ("batch", "einet_nodes", None))
+                health_lib.tap_segment(s)
                 mix_out = None
                 if last.mix_global is not None:
                     ln = s[:, last.mix_child_local, :]
@@ -537,11 +545,13 @@ class EiNet:
                         for t in range(seg.start, seg.stop)
                         if self.pair_specs[t].mix_global is not None
                     )
+                    w0 = buffer.shape[1]
                     buffer = gather_grouped_log_einsum_exp(
                         seg.tables, ws, vs, buffer,
                         block_b=seg.block_b, impl=self.impl,
                     )
                     buffer = _cst(buffer, ("batch", "einet_nodes", None))
+                    health_lib.tap_segment(buffer[:, w0:, :])
                     obs.sync(buffer)
                 continue
             with obs.span("plan.segment", kind=seg.kind,
@@ -553,6 +563,7 @@ class EiNet:
                     einsum_w[seg.start], n_l, n_r, impl=self.impl
                 )
                 s = _cst(s, ("batch", "einet_nodes", None))
+                health_lib.tap_segment(s)
                 mix_out = None
                 if spec.mix_global is not None:
                     ln = s[:, spec.mix_child_local, :]

@@ -71,6 +71,13 @@ class ExponentialFamily:
         """Distribution mode (deterministic decode for argmax sampling)."""
         raise NotImplementedError
 
+    def clamp_fraction(self, phi: jax.Array) -> jax.Array:
+        """Fraction of leaf parameters pinned at their projection bounds
+        (scalar float32) -- the health telemetry's leak detector for EM
+        updates that keep slamming into ``project_phi``'s clamps.  Families
+        without hard bounds report 0."""
+        return jnp.zeros((), jnp.float32)
+
     # --- shared machinery ----------------------------------------------------
     def log_prob(self, x: jax.Array, phi: jax.Array) -> jax.Array:
         """All-leaves log density tensor (the paper's ``E``).
@@ -141,6 +148,12 @@ class Normal(ExponentialFamily):
         mu, var = self._moments(phi)
         return jnp.stack([mu, mu * mu + var], axis=-1)
 
+    def clamp_fraction(self, phi):
+        mu = phi[..., 0]
+        raw_var = phi[..., 1] - mu * mu
+        pinned = (raw_var <= self.min_var) | (raw_var >= self.max_var)
+        return jnp.mean(pinned.astype(jnp.float32))
+
 
 class Bernoulli(ExponentialFamily):
     """x in {0,1}.  T(x) = [x], phi = [p]."""
@@ -180,6 +193,11 @@ class Bernoulli(ExponentialFamily):
 
     def project_phi(self, phi):
         return jnp.clip(phi, self.min_p, 1.0 - self.min_p)
+
+    def clamp_fraction(self, phi):
+        p = phi[..., 0]
+        pinned = (p <= self.min_p) | (p >= 1.0 - self.min_p)
+        return jnp.mean(pinned.astype(jnp.float32))
 
 
 class Binomial(ExponentialFamily):
@@ -235,6 +253,11 @@ class Binomial(ExponentialFamily):
             phi, self.min_p * self.n_trials, (1.0 - self.min_p) * self.n_trials
         )
 
+    def clamp_fraction(self, phi):
+        p = phi[..., 0] / self.n_trials
+        pinned = (p <= self.min_p) | (p >= 1.0 - self.min_p)
+        return jnp.mean(pinned.astype(jnp.float32))
+
 
 class Categorical(ExponentialFamily):
     """x in {0..C-1}.  T(x) = onehot(x), phi = probs (C,)."""
@@ -280,6 +303,9 @@ class Categorical(ExponentialFamily):
 
     def project_phi(self, phi):
         return self._p(phi)
+
+    def clamp_fraction(self, phi):
+        return jnp.mean((phi <= self.min_p).astype(jnp.float32))
 
 
 EF_REGISTRY = {

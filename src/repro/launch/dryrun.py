@@ -123,6 +123,107 @@ def run_verify(archs) -> int:
     return failures
 
 
+# archs whose parameter pytree exceeds this many floats skip the numerical
+# probe (an eager forward on einet_rat_large's 530M params is a dry-run
+# budget, not a smoke test)
+PROBE_PARAM_FLOOR = 80_000_000
+PROBE_BATCH = 8
+
+
+def _probe_data(model, batch: int) -> np.ndarray:
+    """A batch in the arch's EF data domain (lgamma/one-hot blow up on
+    out-of-domain floats, which would make the probe report false alarms)."""
+    rng = np.random.RandomState(0)
+    name = model.ef.name
+    if name == "binomial":
+        hi = model.ef.n_trials
+        return rng.randint(0, hi + 1, (batch, model.num_vars)).astype(
+            np.float32)
+    if name == "categorical":
+        hi = model.ef.num_categories
+        return rng.randint(0, hi, (batch, model.num_vars)).astype(np.float32)
+    if name == "bernoulli":
+        return rng.randint(0, 2, (batch, model.num_vars)).astype(np.float32)
+    return rng.randn(batch, model.num_vars).astype(np.float32)
+
+
+def run_health_probe(archs, out_dir: str = "artifacts/health") -> int:
+    """Numerical-health probe per arch: one eager forward at init params
+    through the tap sites (``repro.obs.health``), recording per-segment
+    saturation and batch-LL health to ``artifacts/health/<arch>.json``.
+
+    Catches init-time numerical rot (a config whose leaves saturate on
+    in-domain data before training even starts) that static verification
+    can't see.  Probe *errors* warn and are recorded but do not fail the
+    gate -- only a non-finite LL on in-domain data counts as a failure.
+    Returns the number of failing archs.
+    """
+    import jax.numpy as jnp
+
+    from repro.launch.cells import build_einet
+    from repro.obs import health as health_lib
+
+    failures = 0
+    os.makedirs(out_dir, exist_ok=True)
+    for arch in archs:
+        path = os.path.join(out_dir, arch.replace("/", "_") + ".json")
+        try:
+            model = build_einet(get_config(arch))
+            shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+            n_params = sum(
+                int(np.prod(s.shape))
+                for s in jax.tree_util.tree_leaves(shapes)
+            )
+            if n_params > PROBE_PARAM_FLOOR:
+                rec = {"arch": arch, "skipped": True,
+                       "num_params": n_params,
+                       "reason": f"param count {n_params} > probe floor "
+                                 f"{PROBE_PARAM_FLOOR}"}
+                print(f"[health] {arch}: skipped ({n_params/1e6:.0f}M "
+                      "params)", flush=True)
+            else:
+                params = model.init(jax.random.PRNGKey(0))
+                x = jnp.asarray(_probe_data(model, PROBE_BATCH))
+                e = model.leaf_log_prob(params, x, None)
+                leaf_rows = model._leaf_rows(e)
+                with health_lib.collect() as taps:
+                    root = model.forward_from_e(
+                        params["einsum"], params["mixing"], None,
+                        leaf_rows=leaf_rows,
+                    )
+                ll = jax.scipy.special.logsumexp(
+                    root + jnp.log(params["class_prior"])[None, :], axis=-1
+                )
+                ll = np.asarray(ll)
+                rec = {
+                    "arch": arch,
+                    "skipped": False,
+                    "num_params": n_params,
+                    "probe_batch": PROBE_BATCH,
+                    "ll_mean": float(np.mean(ll)),
+                    "ll_min": float(np.min(ll)),
+                    "ll_nonfinite": int(np.sum(~np.isfinite(ll))),
+                    "leaf_sat_frac": float(
+                        health_lib.saturation_fraction(leaf_rows)),
+                    "segment_sat_frac": [float(t) for t in taps],
+                }
+                ok = rec["ll_nonfinite"] == 0
+                failures += 0 if ok else 1
+                print(f"[health] {arch}: ll mean {rec['ll_mean']:.2f} "
+                      f"min {rec['ll_min']:.2f}, leaf sat "
+                      f"{rec['leaf_sat_frac']:.3f}, "
+                      f"{len(taps)} segment(s)"
+                      + ("" if ok else "  <-- NON-FINITE"), flush=True)
+        except Exception as e:  # noqa: BLE001 -- probe breakage must not
+            # mask the verify gate; record and move on
+            rec = {"arch": arch, "skipped": True, "reason": repr(e)}
+            print(f"[health] {arch}: probe error (not fatal): {e}",
+                  flush=True)
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+    return failures
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
@@ -149,6 +250,7 @@ def main():
 
     if args.verify:
         failures = run_verify(archs)
+        failures += run_health_probe(archs)
         if failures:
             raise SystemExit(f"{failures} arch(s) failed verification")
         print(f"verification complete: {len(archs)} arch(s) clean")

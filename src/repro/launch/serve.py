@@ -64,13 +64,16 @@ def main():
     ap.add_argument("--trace", default=None, metavar="OUT.json",
                     help="collect obs tracing spans and export a "
                          "Chrome-trace JSON to this path at exit")
+    ap.add_argument("--metrics", default=None, metavar="OUT.json",
+                    help="write the METRICS.snapshot() JSON to this path "
+                         "at exit")
     args = ap.parse_args()
     if not args.smoke and args.arch is None:
         ap.error("--arch is required (or pass --smoke)")
     obs.cli_begin(args.trace)
     cfg = SMOKE_CONFIG if args.smoke else get_config(args.arch)
     serve_einet(cfg, args)
-    obs.cli_end(args.trace)
+    obs.cli_end(args.trace, args.metrics)
 
 
 if __name__ == "__main__":

@@ -30,7 +30,21 @@ from repro.dist import fault_tolerance as ft
 from repro.dist import sharding as shlib
 from repro.launch import cells as dr
 from repro.launch.mesh import dp_shards, make_mesh_for
+from repro.obs import health as health_lib
 from repro.train import TrainConfig, make_em_step, make_sharded_em_step
+
+# --smoke: the CI trace-smoke profile -- a RAT shape small enough to train
+# in seconds on CPU but deep enough to depth-group, with health telemetry
+# forced on so the trace/metrics gates see train.health.* populated
+SMOKE_CONFIG = EinetConfig(
+    name="einet-rat-train-launch-smoke",
+    structure="rat",
+    num_vars=32,
+    depth=2,
+    num_repetitions=2,
+    num_sums=4,
+    batch_size=64,
+)
 
 
 def einet_loader(
@@ -98,8 +112,12 @@ def einet_train_data(cfg: EinetConfig, dataset: str, data_dir: str) -> np.ndarra
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--arch", default=None,
+                    help="registered EiNet config (required unless --smoke)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny built-in arch, few steps, health telemetry "
+                         "on (CI trace-smoke profile)")
+    ap.add_argument("--steps", type=int, default=None)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--model-parallel", type=int, default=1)
     ap.add_argument("--ckpt-dir", default="artifacts/ckpt")
@@ -129,13 +147,33 @@ def main():
     ap.add_argument("--dist-em", action="store_true",
                     help="EiNet: use the shard_map psum-EM step over the "
                          "mesh's data axes (implied by multi-process runs)")
+    ap.add_argument("--health", action="store_true",
+                    help="force device-side health telemetry on (defaults "
+                         "to the model knob / REPRO_HEALTH; implied by "
+                         "--smoke; unsupported with --dist-em)")
+    ap.add_argument("--on-divergence", choices=("abort", "continue"),
+                    default="abort",
+                    help="flight-recorder policy when the health vector "
+                         "trips: dump an incident bundle then abort (raise) "
+                         "or keep training")
     ap.add_argument("--trace", default=None, metavar="OUT.json",
                     help="collect obs tracing spans and export a "
                          "Chrome-trace JSON to this path at exit")
+    ap.add_argument("--metrics", default=None, metavar="OUT.json",
+                    help="write the METRICS.snapshot() JSON (including "
+                         "train.health.* gauges) to this path at exit")
     args = ap.parse_args()
+    if args.arch is None and not args.smoke:
+        ap.error("--arch is required (or pass --smoke)")
+    if args.steps is None:
+        args.steps = 8 if args.smoke else 50
     obs.cli_begin(args.trace)
 
-    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = SMOKE_CONFIG
+        args.arch = args.arch or cfg.name
+    else:
+        cfg = get_config(args.arch)
     mesh = make_mesh_for(model_parallel=args.model_parallel)
     rules = shlib.default_rules(multi_pod=False, fsdp=False)
     mgr = CheckpointManager(
@@ -203,10 +241,27 @@ def main():
             # replay-from-init recovery path re-feeds the initial params when
             # a failure precedes the first committed checkpoint, so the step
             # must not consume them.
+            # health telemetry: --smoke/--health force it on, otherwise the
+            # model knob (REPRO_HEALTH) decides; the sharded psum-EM step
+            # does not support the extra output, so --dist-em keeps it off
+            dist = args.dist_em or jax.process_count() > 1
+            health_knob = (
+                False if dist
+                else (True if (args.smoke or args.health) else None)
+            )
             tcfg = TrainConfig(
                 mode=args.em_mode, num_microbatches=args.microbatches,
-                donate=False)
-            if args.dist_em or jax.process_count() > 1:
+                donate=False, health=health_knob)
+            health_on = (
+                model.health if tcfg.health is None else bool(tcfg.health)
+            )
+            watcher = None
+            if health_on:
+                watcher = health_lib.HealthWatcher(
+                    model, health_lib.HealthPolicy(
+                        on_incident=args.on_divergence)
+                )
+            if dist:
                 # multi-process (or explicitly requested): disjoint
                 # per-process shards REQUIRE the cross-shard statistics
                 # psum inside the step -- the shard_map form makes it
@@ -235,11 +290,18 @@ def main():
             def step_fn(state, batch):
                 x = to_device(batch["x"])
                 with obs.timed("train.step", metric="train.step.seconds"):
-                    p, ll = step_jit(state["params"], x)
+                    if health_on:
+                        p, ll, hv = step_jit(state["params"], x)
+                    else:
+                        p, ll = step_jit(state["params"], x)
+                        hv = None
                     state["last_ll"] = float(ll)
                 obs.METRICS.counter("train.examples.count").inc(
                     int(np.asarray(batch["x"]).shape[0]))
                 obs.METRICS.gauge("train.ll.last").set(state["last_ll"])
+                if watcher is not None:
+                    health_lib.publish(model.health_spec, hv)
+                    watcher.observe(int(state["step"]), hv, p)
                 return {"params": p, "step": state["step"] + 1,
                         "last_ll": state["last_ll"]}
 
@@ -257,7 +319,7 @@ def main():
     print(f"{args.arch}: {args.steps} steps, {dt/max(args.steps,1)*1e3:.0f} "
           f"ms/step, dp_shards={dp_shards(mesh)}, restarts={stats['restarts']}")
     print(f"objective: first {np.mean(lls[:5]):.3f} -> last {np.mean(lls[-5:]):.3f}")
-    obs.cli_end(args.trace)
+    obs.cli_end(args.trace, args.metrics)
 
 
 if __name__ == "__main__":

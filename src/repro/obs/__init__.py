@@ -39,6 +39,7 @@ from repro.obs.trace import (
     Span,
     Timed,
     configure,
+    dropped_events,
     enabled,
     event,
     export_trace,
@@ -55,8 +56,8 @@ from repro.obs.trace import (
 __all__ = [
     "METRICS", "Counter", "Gauge", "Histogram", "MetricsRegistry",
     "Span", "Timed", "cache_event", "compile_event", "configure",
-    "enabled", "event", "export_trace", "format_summary", "now",
-    "num_events", "on_compile", "percentile_from_counts",
+    "dropped_events", "enabled", "event", "export_trace", "format_summary",
+    "now", "num_events", "on_compile", "percentile_from_counts",
     "remove_compile_listener", "reset", "set_sync", "span", "summary",
     "sync", "timed", "trace_events",
 ]
@@ -99,6 +100,8 @@ def summary() -> dict:
         out["plan_segment_traces"] = dict(sorted(seg))
     if num_events():
         out["trace_events"] = num_events()
+    if dropped_events():
+        out["trace_dropped"] = dropped_events()
     return out
 
 
@@ -129,7 +132,10 @@ def format_summary() -> str:
                         s["plan_segment_traces"].items())
         parts.append(f"plan traces: {seg}")
     if "trace_events" in s:
-        parts.append(f"trace: {s['trace_events']} events")
+        t = f"trace: {s['trace_events']} events"
+        if "trace_dropped" in s:
+            t += f" ({s['trace_dropped']} dropped, buffer cap hit)"
+        parts.append(t)
     return " | ".join(parts) if parts else "no activity recorded"
 
 
@@ -139,9 +145,21 @@ def cli_begin(trace_path=None) -> None:
         configure(trace=True)
 
 
-def cli_end(trace_path=None) -> None:
-    """Launch-CLI epilogue: print the ``[obs]`` line; export the trace."""
+def cli_end(trace_path=None, metrics_path=None) -> None:
+    """Launch-CLI epilogue: print the ``[obs]`` line; export the trace and
+    (with ``--metrics out.json``) the metrics snapshot."""
     print(f"[obs] {format_summary()}")
     if trace_path:
         path = export_trace(trace_path)
         print(f"[obs] trace: {num_events()} events -> {path}")
+    if metrics_path:
+        import json
+        import os
+
+        d = os.path.dirname(metrics_path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        snap = METRICS.snapshot()
+        with open(metrics_path, "w") as f:
+            json.dump(snap, f, indent=1)
+        print(f"[obs] metrics: {len(snap)} series -> {metrics_path}")

@@ -94,24 +94,38 @@ class Counter:
 
 
 class Gauge:
-    """Last-write-wins instantaneous value (queue depth, last LL)."""
+    """Last-write-wins instantaneous value (queue depth, last LL).
 
-    __slots__ = ("_lock", "_value")
+    Also keeps a high-watermark: last-write-wins alone made bursty gauges
+    like ``serve.queue.depth`` always read ~0 in end-of-run snapshots (the
+    queue drains before anyone looks), so :attr:`max` records the largest
+    value ever set and the snapshot carries both.
+    """
+
+    __slots__ = ("_lock", "_value", "_max")
 
     def __init__(self):
         self._lock = threading.Lock()
         self._value = 0.0
+        self._max = -math.inf
 
     def set(self, value: float) -> None:
         with self._lock:
             self._value = float(value)
+            if self._value > self._max:
+                self._max = self._value
 
     @property
     def value(self) -> float:
         return self._value
 
-    def snapshot(self) -> float:
-        return self._value
+    @property
+    def max(self) -> float:
+        """High-watermark of every ``set`` (0.0 before the first)."""
+        return self._max if self._max != -math.inf else 0.0
+
+    def snapshot(self) -> Dict[str, float]:
+        return {"value": self._value, "max": self.max}
 
 
 class Histogram:

@@ -261,6 +261,13 @@ def num_events() -> int:
         return len(_STATE.events)
 
 
+def dropped_events() -> int:
+    """Events discarded past the buffer cap (surfaced by the ``[obs]`` exit
+    summary so a truncated trace is never silent)."""
+    with _STATE.lock:
+        return _STATE.dropped
+
+
 def reset() -> None:
     """Drop every buffered event (tests, repeated benchmark passes)."""
     with _STATE.lock:

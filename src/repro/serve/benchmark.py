@@ -143,6 +143,9 @@ def run_benchmark(
         "compiles": engine.stats["compiles"],
         "scheduler_steps": steps_per_pass,
         "padded_rows": padded_per_pass,
+        # high-watermark, not last-write: the queue drains before the report
+        # is assembled, so the plain gauge value always reads ~0 here
+        "queue_depth_max": METRICS.gauge("serve.queue.depth").max,
         "parity_max_abs_diff": parity,
     }
 

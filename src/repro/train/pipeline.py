@@ -43,6 +43,7 @@ from repro.core.em import (
     m_step,
     zeros_like_statistics,
 )
+from repro.obs import health as health_lib
 
 # At or below this many microbatches the accumulation loop is UNROLLED into
 # the jitted program instead of lowered as ``lax.scan``.  This threshold is
@@ -88,6 +89,12 @@ class TrainConfig:
     scan_microbatches: Optional[bool] = None
     """None: scan only above ``SCAN_UNROLL_MAX`` microbatches (measured
     small-arch crossover); True/False force the lowering either way."""
+    health: Optional[bool] = None
+    """Emit the device-side health vector (``repro.obs.health``) as a third
+    step output.  None defers to the model's ``health`` knob (which itself
+    defers to ``REPRO_HEALTH``); the resolved flag is part of the compiled
+    step's registry key, so toggling it selects a different cached program
+    instead of recompiling an existing one."""
 
 
 def _split_microbatches(x: jax.Array, num_microbatches: int) -> jax.Array:
@@ -149,6 +156,14 @@ def microbatched_em_statistics(
     return acc
 
 
+def _probe_slice(x: jax.Array, num_microbatches: int) -> jax.Array:
+    """The (static) subbatch the dedicated health forward runs on: the full
+    batch at one microbatch (XLA CSE merges the probe with the E-step's
+    primal forward -- the scan body can't leak intermediates, so at more
+    microbatches the probe re-runs one bounded forward instead)."""
+    return x[: x.shape[0] // max(num_microbatches, 1)]
+
+
 def em_update_microbatched(
     model: EiNet,
     params: Dict[str, Any],
@@ -157,16 +172,24 @@ def em_update_microbatched(
     num_microbatches: int = 1,
     axis_names: Optional[Sequence[str]] = None,
     scan: Optional[bool] = None,
-) -> Tuple[Dict[str, Any], jax.Array]:
+    health: bool = False,
+):
     """One full EM update (monotone on the batch), microbatch-accumulated.
 
-    Returns (new_params, mean log-likelihood).
+    Returns (new_params, mean log-likelihood), plus the packed health vector
+    (``repro.obs.health``) as a third element when ``health``.
     """
     stats = microbatched_em_statistics(
         model, params, x, num_microbatches, axis_names, scan
     )
     new = m_step(model, stats, cfg)
-    return new, stats["ll"] / stats["count"]
+    ll = stats["ll"] / stats["count"]
+    if not health:
+        return new, ll
+    hv = health_lib.health_vector(
+        model, params, _probe_slice(x, num_microbatches), stats, new
+    )
+    return new, ll, hv
 
 
 def stochastic_em_update_microbatched(
@@ -177,12 +200,23 @@ def stochastic_em_update_microbatched(
     num_microbatches: int = 1,
     axis_names: Optional[Sequence[str]] = None,
     scan: Optional[bool] = None,
-) -> Tuple[Dict[str, Any], jax.Array]:
+    health: bool = False,
+):
     """Sato online EM (Eqs. 8/9) with microbatch-accumulated statistics."""
-    mini, ll = em_update_microbatched(
-        model, params, x, cfg, num_microbatches, axis_names, scan
+    stats = microbatched_em_statistics(
+        model, params, x, num_microbatches, axis_names, scan
     )
-    return blend_params(model, params, mini, cfg.step_size), ll
+    mini = m_step(model, stats, cfg)
+    new = blend_params(model, params, mini, cfg.step_size)
+    ll = stats["ll"] / stats["count"]
+    if not health:
+        return new, ll
+    # entropy/clamp slots monitor the params the NEXT step will run on,
+    # i.e. the blended ones
+    hv = health_lib.health_vector(
+        model, params, _probe_slice(x, num_microbatches), stats, new
+    )
+    return new, ll, hv
 
 
 def _resolve_donate(donate: Optional[bool]) -> bool:
@@ -191,15 +225,20 @@ def _resolve_donate(donate: Optional[bool]) -> bool:
     return bool(donate)
 
 
-def _step_key(cfg: TrainConfig, donate: bool, tag: str) -> tuple:
+def _step_key(cfg: TrainConfig, donate: bool, tag: str,
+              health: bool = False) -> tuple:
     """Registry key for one jitted training step: the step kind + every
     config field that changes the compiled program."""
     return (
         tag, cfg.mode, cfg.num_microbatches,
         _resolve_scan(cfg.scan_microbatches, cfg.num_microbatches),
         tuple(cfg.axis_names) if cfg.axis_names else None,
-        cfg.em, donate,
+        cfg.em, donate, health,
     )
+
+
+def _resolve_step_health(model: EiNet, cfg: TrainConfig) -> bool:
+    return model.health if cfg.health is None else bool(cfg.health)
 
 
 def make_em_step(
@@ -216,6 +255,10 @@ def make_em_step(
     repeat calls with the same (model, cfg) return the SAME compiled callable
     -- the serve/train unification: one registry holds serving's AOT bucket
     programs and training's donated steps.
+
+    With health telemetry resolved on (``TrainConfig.health``, else the
+    model's knob) the step returns (params, ll, health_vector) instead --
+    the extra output is computed inside the same compiled program.
     """
     if cfg.mode not in ("stochastic", "full"):
         raise ValueError(f"unknown mode {cfg.mode!r}; 'stochastic' or 'full'")
@@ -224,18 +267,19 @@ def make_em_step(
         if cfg.mode == "stochastic"
         else em_update_microbatched
     )
+    health_on = _resolve_step_health(model, cfg)
 
     def step(params, x):
         return update(
             model, params, x, cfg.em, cfg.num_microbatches, cfg.axis_names,
-            cfg.scan_microbatches,
+            cfg.scan_microbatches, health=health_on,
         )
 
     donate_flag = _resolve_donate(cfg.donate)
     donate = (0,) if donate_flag else ()
     reg = registry if registry is not None else compile_lib.REGISTRY
     return reg.jit(
-        model, _step_key(cfg, donate_flag, "em_step"), step,
+        model, _step_key(cfg, donate_flag, "em_step", health_on), step,
         donate_argnums=donate,
     )
 
@@ -259,6 +303,11 @@ def make_sharded_em_step(
     Inside the manually-partitioned body the logical-axis rule table is
     disabled (``use_rules({})``): GSPMD constraints don't apply to manual
     axes, and the psum already fixes the only layout decision that matters.
+
+    Health telemetry is NOT supported on this path (the vector would need
+    its own replication spec for no operational win -- the single-shard
+    probe in ``launch.train`` covers the same failure modes); the sharded
+    step always returns the 2-tuple.
     """
     if cfg.mode not in ("stochastic", "full"):
         raise ValueError(f"unknown mode {cfg.mode!r}; 'stochastic' or 'full'")
@@ -310,14 +359,25 @@ def fit(
     cfg: TrainConfig = TrainConfig(),
     num_steps: Optional[int] = None,
     on_step: Optional[Callable[[int, float], None]] = None,
+    health_policy: Optional[health_lib.HealthPolicy] = None,
 ) -> Tuple[Dict[str, Any], list]:
     """Convenience driver: run the compiled step over an iterable of batches.
 
     ``batches`` yields (B, D) arrays (or dicts with an "x" key).  Returns
     (final_params, per-step mean-LL list).  For the production loop with
     checkpoint-restart and sharded loaders, use ``repro.launch.train``.
+
+    With health telemetry resolved on, every step's health vector feeds the
+    ``train.health.*`` gauges and a :class:`repro.obs.health.HealthWatcher`
+    (``health_policy`` configures it): a divergence dumps an incident bundle
+    and -- under the default "abort" policy -- raises
+    :class:`repro.obs.health.DivergenceError`.
     """
     step_fn = make_em_step(model, cfg)
+    health_on = _resolve_step_health(model, cfg)
+    watcher = (
+        health_lib.HealthWatcher(model, health_policy) if health_on else None
+    )
     lls: list = []
     for i, batch in enumerate(batches):
         if num_steps is not None and i >= num_steps:
@@ -327,10 +387,17 @@ def fit(
         # float(ll) blocks on the device, so the timed region covers the
         # full step (dispatch + compute), not just dispatch
         with obs.timed("train.step", metric="train.step.seconds"):
-            params, ll = step_fn(params, x)
+            if health_on:
+                params, ll, hv = step_fn(params, x)
+            else:
+                params, ll = step_fn(params, x)
+                hv = None
             lls.append(float(ll))
         obs.METRICS.counter("train.examples.count").inc(int(x.shape[0]))
         obs.METRICS.gauge("train.ll.last").set(lls[-1])
+        if watcher is not None:
+            health_lib.publish(model.health_spec, hv)
+            watcher.observe(i, hv, params)
         if on_step is not None:
             on_step(i, lls[-1])
     return params, lls

@@ -150,7 +150,10 @@ def test_snapshot_is_plain_json(tmp_path):
     text = json.dumps(snap)  # must be JSON-able as-is (BENCH files)
     back = json.loads(text)
     assert back["test.obs.snap.count{kind=a}"] == 3
-    assert back["test.obs.snap.depth"] == 7.0
+    # gauges snapshot value + high-watermark (bursty gauges like queue depth
+    # read ~0 at end-of-run without the max)
+    assert back["test.obs.snap.depth"]["value"] == 7.0
+    assert back["test.obs.snap.depth"]["max"] == 7.0
     h = back["test.obs.snap.seconds"]
     assert h["count"] >= 1 and h["p50"] > 0
 

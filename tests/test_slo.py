@@ -1,0 +1,215 @@
+"""SLO budget + bench-history tests: the perf gate is a *contract*.
+
+The committed ``slo.json`` must admit the committed ``BENCH_*.json`` (else
+the gate is red at HEAD), synthetic breaches must be caught with the
+declared noise tolerance applied, smoke reports must be checked for
+correctness flags only, and every history row must be commit-stamped and
+round-trip through the JSONL store.
+"""
+
+import json
+import os
+
+import pytest
+
+from repro.obs import slo as slo_lib
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+SLO = {
+    "tolerance": 0.10,
+    "serve": {
+        "max_parity_abs_diff": 1e-5,
+        "min_speedup_vs_jitted": 2.0,
+        "p99_ms": {"joint_ll": 10.0},
+    },
+    "train": {"min_speedup": 1.0, "max_step_ms": {"einet_rat": 100.0}},
+    "mixture": {"min_speedup": 1.2},
+    "eval": {"min_engine_vs_direct": 0.2},
+}
+
+
+def _serve_report(**over):
+    r = {
+        "parity_ok": True,
+        "grouped_ok": True,
+        "parity_max_abs_diff": 1e-7,
+        "speedup_vs_jitted": 3.0,
+        "latency_ms": {"joint_ll": {"p50": 1.0, "p95": 5.0, "p99": 8.0}},
+    }
+    r.update(over)
+    return r
+
+
+# ------------------------------------------------------------------ budgets
+def test_serve_within_budget():
+    assert slo_lib.check_report("serve", _serve_report(), SLO) == []
+
+
+def test_serve_p99_breach_uses_tolerance():
+    # budget 10 ms, tolerance 10% -> limit 11 ms: 10.5 passes, 11.5 fails
+    ok = _serve_report(latency_ms={"joint_ll": {"p99": 10.5}})
+    assert slo_lib.check_report("serve", ok, SLO) == []
+    bad = _serve_report(latency_ms={"joint_ll": {"p99": 11.5}})
+    probs = slo_lib.check_report("serve", bad, SLO)
+    assert len(probs) == 1 and "p99" in probs[0] and "tolerance" in probs[0]
+
+
+def test_serve_flags_checked_even_on_smoke():
+    bad = _serve_report(smoke=True, parity_ok=False,
+                        parity_max_abs_diff=1.0)
+    probs = slo_lib.check_report("serve", bad, SLO)
+    assert any("parity_ok" in p for p in probs)
+    assert any("parity_max_abs_diff" in p for p in probs)
+    # but no timing problems: smoke wall-clock carries no signal
+    slow_smoke = _serve_report(
+        smoke=True, latency_ms={"joint_ll": {"p99": 9999.0}},
+        speedup_vs_jitted=0.01)
+    assert slo_lib.check_report("serve", slow_smoke, SLO) == []
+
+
+def test_serve_pd_smoke_subreport_flags():
+    r = _serve_report(pd_smoke={"parity_ok": True, "grouped_ok": False,
+                                "parity_max_abs_diff": 0.0})
+    probs = slo_lib.check_report("serve", r, SLO)
+    assert probs == ["serve.pd_smoke: grouped_ok is not true"]
+
+
+def test_serve_missing_latency_kind_is_a_problem():
+    r = _serve_report(latency_ms={})
+    assert any("no latency for kind 'joint_ll'" in p
+               for p in slo_lib.check_report("serve", r, SLO))
+
+
+def test_train_budgets_and_waiver():
+    base = {"parity_ok": True, "grouped_ok": True}
+    rows = [{"arch_id": "einet_rat", "grad_parity_ok": True,
+             "fused_ms_per_step": 50.0, "speedup": 2.0}]
+    assert slo_lib.check_report(
+        "train", dict(base, results=rows), SLO) == []
+    slow = [dict(rows[0], fused_ms_per_step=150.0)]
+    assert any("fused step" in p for p in slo_lib.check_report(
+        "train", dict(base, results=slow), SLO))
+    # below the speedup floor trips -- unless the row carries a waiver
+    regressed = [dict(rows[0], speedup=0.5)]
+    assert any("speedup" in p for p in slo_lib.check_report(
+        "train", dict(base, results=regressed), SLO))
+    waived = [dict(rows[0], speedup=0.5, speedup_waiver="tiny arch")]
+    assert slo_lib.check_report(
+        "train", dict(base, results=waived), SLO) == []
+
+
+def test_mixture_and_eval_budgets():
+    mix = {"parity_ok": True,
+           "results": [{"cell": "a", "speedup": 2.0},
+                       {"cell": "b", "speedup": 0.9}]}
+    probs = slo_lib.check_report("mixture", mix, SLO)
+    assert len(probs) == 1 and "mixture[b]" in probs[0]
+    ev = {"parity_ok": True, "engine_vs_direct": 0.3}
+    assert slo_lib.check_report("eval", ev, SLO) == []
+    ev_bad = {"parity_ok": True, "engine_vs_direct": 0.1}
+    assert any("engine_vs_direct" in p
+               for p in slo_lib.check_report("eval", ev_bad, SLO))
+
+
+def test_unknown_kind_rejected():
+    assert slo_lib.check_report("nope", {}, SLO) != []
+
+
+def test_check_all_empty_dir_is_not_a_pass(tmp_path):
+    out = slo_lib.check_all(bench_dir=str(tmp_path), slo=SLO)
+    assert out == {"(none)": [f"no BENCH_*.json found in {str(tmp_path)!r}"]}
+
+
+def test_check_all_malformed_bench_file(tmp_path):
+    (tmp_path / "BENCH_serve.json").write_text("{not json")
+    out = slo_lib.check_all(bench_dir=str(tmp_path), slo=SLO)
+    assert any("cannot load" in p for p in out["serve"])
+
+
+# -------------------------------------------- the committed contract at HEAD
+def test_committed_slo_admits_committed_benches():
+    """The repo's own slo.json must pass against the repo's own BENCH
+    files -- a red gate at HEAD means either the budget or the committed
+    numbers are wrong, and this test catches it before CI does."""
+    slo = slo_lib.load_slo(os.path.join(REPO_ROOT, "slo.json"))
+    out = slo_lib.check_all(bench_dir=REPO_ROOT, slo=slo)
+    assert "(none)" not in out, "no committed BENCH files found"
+    for kind, problems in sorted(out.items()):
+        assert problems == [], f"{kind}: {problems}"
+
+
+# ------------------------------------------------------------------ history
+def test_history_row_is_commit_stamped():
+    row = slo_lib.history_row(
+        "eval", {"timestamp": "2026-08-08T00:00:00+00:00", "smoke": True,
+                 "engine_vs_direct": 0.3, "parity_ok": True})
+    assert row["bench"] == "eval"
+    assert row["ts"] == "2026-08-08T00:00:00+00:00"  # report ts wins
+    assert row["smoke"] is True
+    assert isinstance(row["commit"], str) and row["commit"]
+    assert row["engine_vs_direct"] == 0.3
+    # without a report timestamp the row stamps itself (UTC ISO)
+    assert "T" in slo_lib.history_row("eval", {})["ts"]
+
+
+def test_append_and_load_history_roundtrip(tmp_path):
+    root = str(tmp_path / "hist")
+    r1 = {"parity_ok": True, "results": [
+        {"arch_id": "einet_rat", "fused_ms_per_step": 50.0, "speedup": 2.0}]}
+    r2 = {"parity_ok": True, "smoke": True, "results": []}
+    p1 = slo_lib.append_history("train", r1, root=root)
+    p2 = slo_lib.append_history("train", r2, root=root)
+    assert p1 == p2 == os.path.join(root, "train.jsonl")
+    hist = slo_lib.load_history(root)
+    assert list(hist) == ["train"]
+    assert len(hist["train"]) == 2  # appends, never truncates
+    assert hist["train"][0]["cells"]["einet_rat"]["fused_ms"] == 50.0
+    assert hist["train"][1]["smoke"] is True
+    # every line is self-contained JSON (greppable / tail-able)
+    with open(p1) as f:
+        for line in f:
+            json.loads(line)
+
+
+def test_load_history_skips_malformed_lines(tmp_path):
+    root = tmp_path / "hist"
+    root.mkdir()
+    (root / "serve.jsonl").write_text(
+        json.dumps({"bench": "serve", "commit": "abc"}) + "\n"
+        + "not json at all\n"
+        + json.dumps({"bench": "serve", "commit": "def"}) + "\n")
+    hist = slo_lib.load_history(str(root))
+    assert [r["commit"] for r in hist["serve"]] == ["abc", "def"]
+
+
+def test_load_history_missing_dir(tmp_path):
+    assert slo_lib.load_history(str(tmp_path / "nowhere")) == {}
+
+
+# ------------------------------------------------------------------ CLI
+def test_cli_check_passes_on_committed_contract(capsys):
+    cwd = os.getcwd()
+    os.chdir(REPO_ROOT)
+    try:
+        status = slo_lib.main(["--check"])
+    finally:
+        os.chdir(cwd)
+    out = capsys.readouterr().out
+    assert status == 0
+    assert "within budget" in out
+
+
+def test_cli_check_fails_on_breach(tmp_path, capsys):
+    (tmp_path / "slo.json").write_text(json.dumps(SLO))
+    (tmp_path / "BENCH_eval.json").write_text(json.dumps(
+        {"parity_ok": True, "engine_vs_direct": 0.01}))
+    status = slo_lib.main(["--check", "--dir", str(tmp_path),
+                           "--slo", str(tmp_path / "slo.json")])
+    assert status == 1
+    assert "engine_vs_direct" in capsys.readouterr().out
+
+
+def test_cli_requires_an_action():
+    with pytest.raises(SystemExit):
+        slo_lib.main([])
